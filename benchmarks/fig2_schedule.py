@@ -1,0 +1,96 @@
+"""Fig. 2 reproduction: the execution schedule, rendered.
+
+The paper's Fig. 2 contrasts the conventional engine (every miss stalls
+everything) with the dataflow engine (stalls localized to the fetch stage,
+shadowed by the long-latency compute stage).  This renders the same
+comparison as an ASCII Gantt chart from the actual simulator state —
+per-stage start/finish times for the first iterations of an SpMV-like
+pipeline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.simulator import (MemAccess, SimStage, acp,
+                                  simulate_conventional, simulate_dataflow)
+
+
+def _gantt(starts: np.ndarray, finishes: np.ndarray, names: list[str],
+           n_iters: int, width: int = 100) -> str:
+    t_max = finishes.max()
+    scale = width / max(1, t_max)
+    lines = []
+    for s, name in enumerate(names):
+        row = [" "] * (width + 1)
+        for i in range(n_iters):
+            a = int(starts[s, i] * scale)
+            b = max(a + 1, int(finishes[s, i] * scale))
+            ch = chr(ord("0") + i % 10)
+            for x in range(a, min(b, width)):
+                row[x] = ch
+        lines.append(f"{name:>8} |{''.join(row)}")
+    lines.append(f"{'':>8} +{'-' * width}> cycles (0..{int(t_max)})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 12
+    # an SpMV-like pipeline: sequential index fetch → random x fetch →
+    # long-latency FMA → sequential store
+    stages = [
+        SimStage("idx", ii=1, latency=2,
+                 accesses=[MemAccess("cols", np.arange(n) * 4)]),
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x",
+                                     rng.integers(0, 4 << 20, n) * 4)]),
+        SimStage("fma", ii=6, latency=8),
+        SimStage("store", ii=1, latency=2,
+                 accesses=[MemAccess("y", np.arange(n) * 4,
+                                     is_store=True)]),
+    ]
+    mem = acp()
+
+    # re-run the dataflow sim but capture the schedule matrices
+    import repro.core.simulator as sim
+
+    S = len(stages)
+    state = mem.make_state()
+    start = np.zeros((S, n), dtype=np.int64)
+    finish = np.zeros((S, n), dtype=np.int64)
+    for i in range(n):
+        for s, st in enumerate(stages):
+            t = 0
+            if i > 0:
+                t = max(t, start[s, i - 1] + st.ii)
+            if s > 0:
+                t = max(t, finish[s - 1, i])
+            lat = st.latency
+            for acc in st.accesses:
+                a = int(acc.addrs[i]) if i < len(acc.addrs) else -1
+                if a < 0:
+                    continue
+                if i > 0 and bool(acc.sequential[i]):
+                    continue
+                lat = max(lat, st.latency + state.access_latency(a))
+            start[s, i] = t
+            finish[s, i] = t + lat
+
+    print("Dataflow engine (Fig. 2 bottom): stalls stay inside 'fetch';")
+    print("'fma' streams at its II once the FIFO fills.\n")
+    print(_gantt(start, finish, [st.name for st in stages], n))
+
+    cv = simulate_conventional(
+        [SimStage("fused", ii=max(s.ii for s in stages),
+                  latency=sum(s.latency for s in stages),
+                  accesses=[a for s in stages for a in s.accesses])],
+        acp(), n)
+    df_cycles = int(finish[-1, -1])
+    print(f"\nConventional engine (Fig. 2 top): {cv.cycles} cycles for the "
+          f"same {n} iterations — {cv.cycles / max(1, df_cycles):.1f}x "
+          f"slower (every access serializes into the single schedule).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Per-kernel micro-benchmarks (CSV: name,us_per_call,derived).
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock measures the *reference* (pure-jnp) path; the kernel-specific
+derived column reports the structural quantities that determine TPU
+performance: VMEM working set of the chosen BlockSpecs and arithmetic
+intensity (FLOPs/HBM byte), which positions each kernel on the v5e
+roofline (ridge at 197e12/819e9 ≈ 241 FLOP/B).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_matmul() -> list[tuple]:
+    rows = []
+    for M, K, N, bm, bk, bn in [(512, 512, 512, 128, 512, 128),
+                                (1024, 1024, 512, 128, 512, 128)]:
+        x = jnp.ones((M, K), jnp.bfloat16)
+        w = jnp.ones((K, N), jnp.bfloat16)
+        us = _time(jax.jit(lambda a, b: ref.matmul_ref(a, b)), x, w)
+        flops = 2 * M * K * N
+        bytes_ = 2 * (M * K + K * N + M * N)
+        vmem = 2 * (bm * bk + bk * bn) + 4 * bm * bn
+        rows.append((f"matmul_{M}x{K}x{N}", us,
+                     f"AI={flops / bytes_:.0f}flop/B;vmem={vmem >> 10}KB"))
+    return rows
+
+
+def bench_attention() -> list[tuple]:
+    rows = []
+    for B, H, S, d in [(1, 8, 1024, 64), (1, 8, 4096, 64)]:
+        q = jnp.ones((B, H, S, d), jnp.bfloat16)
+        us = _time(jax.jit(lambda q: ref.flash_attention_ref(q, q, q)), q)
+        flops = 4 * B * H * S * S * d
+        bytes_ = 2 * 4 * B * H * S * d
+        rows.append((f"attn_{B}x{H}x{S}x{d}", us,
+                     f"AI={flops / bytes_:.0f}flop/B"))
+    return rows
+
+
+def bench_decode() -> list[tuple]:
+    rows = []
+    for B, H, S, d in [(8, 8, 4096, 64)]:
+        q = jnp.ones((B, H, d), jnp.bfloat16)
+        kc = jnp.ones((B, H, S, d), jnp.bfloat16)
+        lens = jnp.full((B,), S, jnp.int32)
+        us = _time(jax.jit(
+            lambda q, k, l: ref.decode_attention_ref(q, k, k, l)),
+            q, kc, lens)
+        flops = 4 * B * H * S * d
+        bytes_ = 2 * 2 * B * H * S * d
+        rows.append((f"decode_{B}x{H}x{S}x{d}", us,
+                     f"AI={flops / bytes_:.1f}flop/B(mem-bound)"))
+    return rows
+
+
+def bench_spmv() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    nbr, nnz, bm, bk = 16, 8, 8, 128
+    vals = jnp.asarray(rng.normal(size=(nbr, nnz, bm, bk)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, nnz, (nbr, nnz)), jnp.int32)
+    x = jnp.ones((nnz * bk,), jnp.float32)
+    us = _time(jax.jit(
+        lambda v, c, x: ref.spmv_bsr_ref(v, c, x, nbr * bm)),
+        vals, cols, x)
+    flops = 2 * nbr * nnz * bm * bk
+    bytes_ = 4 * (vals.size + x.size)
+    return [(f"spmv_bsr_{nbr}x{nnz}x{bm}x{bk}", us,
+             f"AI={flops / bytes_:.2f}flop/B(mem-bound)")]
+
+
+def all_rows() -> list[tuple]:
+    return (bench_matmul() + bench_attention() + bench_decode()
+            + bench_spmv())
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""The paper's four benchmark kernels (§V, Table I), as JAX loop bodies +
+reference implementations + memory-address-trace generators.
+
+Each kernel provides:
+  * ``loop_body``    — one inner-loop iteration, traced by the CDFG front
+                       end (the HLS view Algorithm 1 partitions);
+  * ``reference``    — a vectorized JAX implementation (correctness oracle);
+  * ``traces``       — per-region word-address streams of the *actual*
+                       execution, fed to the cycle simulator's cache model;
+  * ``meta``         — iteration counts, baseline instruction estimates,
+                       and which regions sit inside a memory SCC (DFS).
+
+Datasets follow Table I, scaled by ``scale`` (1.0 = the paper's sizes;
+benchmarks default to a reduced scale and extrapolate via steady-state
+cycles/iteration, which the pipeline reaches within a few hundred
+iterations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulator import MemAccess
+
+
+@dataclasses.dataclass
+class PaperKernel:
+    name: str
+    loop_body: Callable          # (carry, args...) -> carry
+    carry_example: tuple
+    body_args: tuple             # example args for tracing
+    regions: dict[int, str]      # invar index -> region name (annotation)
+    traces: dict[str, MemAccess]
+    n_iters_full: int            # Table-I-scale iteration count
+    n_iters_sim: int             # simulated window
+    instrs_per_iter: float       # ARM baseline estimate
+    mem_in_scc_regions: tuple = ()
+    nonaliasing_carries: tuple = ()
+    reference: Callable | None = None
+    reference_args: tuple = ()
+    expected: np.ndarray | None = None
+
+
+# ---------------------------------------------------------------------------
+# 1. SpMV (CSR): dim 4096, density 0.25 (≈16 MB)
+# ---------------------------------------------------------------------------
+
+def make_spmv(scale: float = 0.125, seed: int = 0) -> PaperKernel:
+    dim = max(64, int(4096 * scale))
+    rng = np.random.default_rng(seed)
+    density = 0.25
+    # build a random CSR matrix
+    nnz_per_row = np.maximum(1, rng.binomial(dim, density, size=dim))
+    indptr = np.zeros(dim + 1, np.int64)
+    indptr[1:] = np.cumsum(nnz_per_row)
+    nnz = int(indptr[-1])
+    indices = np.concatenate([
+        np.sort(rng.choice(dim, size=n, replace=False))
+        for n in nnz_per_row]).astype(np.int32)
+    data = rng.normal(size=nnz).astype(np.float32)
+    x = rng.normal(size=dim).astype(np.float32)
+
+    vals_j = jnp.asarray(data)
+    cols_j = jnp.asarray(indices)
+    x_j = jnp.asarray(x)
+
+    def loop_body(acc, j, vals=vals_j, cols=cols_j, xv=x_j):
+        c = cols[j]          # sequential index load
+        v = vals[j]          # sequential value load
+        xx = xv[c]           # data-dependent gather (the pathology)
+        return acc + v * xx  # fp multiply feeding the accumulation SCC
+
+    n_sim = 40_000
+    # traces are FULL-scale (Table I: dim 4096, 16 MB) so the cache models
+    # see the real working set; `scale` only shrinks the correctness data.
+    full_dim = 4096
+    trng = np.random.default_rng(seed + 100)
+    traces = {
+        "cols": MemAccess("cols", np.arange(n_sim) * 4),
+        "vals": MemAccess("vals", np.arange(n_sim) * 4 + (1 << 24)),
+        "x": MemAccess("x", trng.integers(0, full_dim, n_sim).astype(
+            np.int64) * 4 + (1 << 25)),
+    }
+
+    def reference(vals, cols, indptr, xv):
+        contrib = vals * xv[cols]
+        row_id = np.repeat(np.arange(dim), np.diff(indptr))
+        return jnp.asarray(np.add.reduceat(
+            np.asarray(contrib), indptr[:-1].astype(np.int64)))
+
+    expected = (np.add.reduceat(data * x[indices],
+                                indptr[:-1].astype(np.int64))
+                if nnz else np.zeros(dim))
+
+    return PaperKernel(
+        name="spmv",
+        loop_body=loop_body,
+        carry_example=jnp.float32(0.0),
+        body_args=(jnp.int32(0),),
+        regions={},
+        traces=traces,
+        n_iters_full=int(4096 * 4096 * 0.25),
+        n_iters_sim=n_sim,
+        instrs_per_iter=9.0,
+        expected=expected.astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. Knapsack DP: W=3200, N=200 (≈5 MB)
+# ---------------------------------------------------------------------------
+
+def make_knapsack(scale: float = 0.25, seed: int = 1) -> PaperKernel:
+    W = max(64, int(3200 * scale))
+    N = max(8, int(200 * scale))
+    rng = np.random.default_rng(seed)
+    weights = rng.integers(1, 64, size=N).astype(np.int32)
+    values = rng.integers(1, 100, size=N).astype(np.int32)
+
+    dp_j = jnp.zeros(W + 1, jnp.int32)
+    w_j = jnp.asarray(weights)
+    v_j = jnp.asarray(values)
+
+    def loop_body(dp, ij, w=w_j, v=v_j):
+        # one (i, j) inner iteration, j descending
+        i, j = ij
+        cur = dp[j]                       # load dp[j]
+        take = dp[j - w[i]] + v[i]        # load dp[j-w]; the DP recurrence
+        new = jnp.maximum(cur, take)
+        return dp.at[j].set(jnp.where(j >= w[i], new, cur))  # store dp[j]
+
+    # FULL-scale 2-D DP table traces (W=3200, N=200 => ~5 MB, Table I):
+    # row i reads row i-1 (two streams) and writes row i.
+    n_sim = 40_000
+    Wf = 3200
+    t = np.arange(n_sim)
+    ti = t // Wf
+    tj = Wf - (t % Wf)
+    wt = np.asarray(weights)[(ti % len(weights))].astype(np.int64)
+    traces = {
+        "dp_load": MemAccess("dp_load", ((ti - 1).clip(0) * Wf + tj) * 4),
+        "dp_load2": MemAccess("dp_load2",
+                              ((ti - 1).clip(0) * Wf
+                               + np.maximum(0, tj - wt)) * 4),
+        "dp_store": MemAccess("dp_store", (ti * Wf + tj) * 4,
+                              is_store=True),
+    }
+    cnt = n_sim
+
+    # reference: classic vectorized DP
+    dp = np.zeros(W + 1, np.int64)
+    for i in range(N):
+        w, v = int(weights[i]), int(values[i])
+        dp[w:] = np.maximum(dp[w:], dp[:-w] + v if w else dp[w:])
+    return PaperKernel(
+        name="knapsack",
+        loop_body=loop_body,
+        carry_example=dp_j,
+        body_args=((jnp.int32(0), jnp.int32(1)),),
+        regions={},
+        traces=traces,
+        n_iters_full=3200 * 200,
+        n_iters_sim=cnt,
+        instrs_per_iter=11.0,
+        nonaliasing_carries=(0,),  # §III-A annotation: row i-1 -> row i
+        expected=dp.astype(np.int64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3. Floyd–Warshall: 1024 nodes (≈8 MB) — regular but data-derived addresses
+# ---------------------------------------------------------------------------
+
+def make_floyd_warshall(scale: float = 0.125, seed: int = 2) -> PaperKernel:
+    n = max(32, int(1024 * scale))
+    rng = np.random.default_rng(seed)
+    dist0 = rng.integers(1, 100, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(dist0, 0)
+
+    dist_j = jnp.asarray(dist0.reshape(-1))
+
+    def loop_body(dist, kij, n=n):
+        k, i, j = kij
+        d_ij = dist[i * n + j]            # load
+        d_ik = dist[i * n + k]            # load
+        d_kj = dist[k * n + j]            # load
+        new = jnp.minimum(d_ij, d_ik + d_kj)
+        return dist.at[i * n + j].set(new)  # store
+
+    n_sim = 40_000
+    nf = 1024  # full Table-I scale for the memory model
+    ks = np.zeros(n_sim, np.int64)
+    iis = (np.arange(n_sim) // nf) % nf
+    jjs = np.arange(n_sim) % nf
+    traces = {
+        "d_ij": MemAccess("d_ij", (iis * nf + jjs) * 4),
+        "d_ik": MemAccess("d_ik", (iis * nf + ks) * 4),
+        "d_kj": MemAccess("d_kj", (ks * nf + jjs) * 4),
+        "d_store": MemAccess("d_store", (iis * nf + jjs) * 4,
+                             is_store=True),
+    }
+
+    d = dist0.copy()
+    for k in range(n):
+        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+    return PaperKernel(
+        name="floyd_warshall",
+        loop_body=loop_body,
+        carry_example=dist_j,
+        body_args=((jnp.int32(0), jnp.int32(0), jnp.int32(1)),),
+        regions={},
+        traces=traces,
+        n_iters_full=1024 ** 3,
+        n_iters_sim=n_sim,
+        instrs_per_iter=12.0,
+        nonaliasing_carries=(0,),  # §III-A annotation: k-pass writes don't
+                                   # feed row/col-k reads within the pass
+        expected=d.astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. DFS: 4000 nodes × 200 neighbors (≈3 MB) — stack = memory SCC
+# ---------------------------------------------------------------------------
+
+def make_dfs(scale: float = 0.25, seed: int = 3) -> PaperKernel:
+    n_nodes = max(64, int(4000 * scale))
+    n_nbrs = max(8, int(200 * scale))
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, n_nodes, size=(n_nodes, n_nbrs)).astype(np.int32)
+
+    stack_j = jnp.zeros(n_nodes * 4, jnp.int32)
+    visited_j = jnp.zeros(n_nodes, jnp.int32)
+    adj_j = jnp.asarray(adj.reshape(-1))
+
+    def loop_body(carry, _, n_nbrs=n_nbrs):
+        # one DFS step: pop, mark, push first unvisited neighbor.
+        stack, visited, sp = carry
+        node = stack[sp - 1]                       # load through the stack
+        visited = visited.at[node].set(1)          # store visited
+        nb = adj_j[node * n_nbrs]                  # load adjacency
+        seen = visited[nb]                         # load visited[nb]
+        push = 1 - seen
+        stack = stack.at[sp].set(nb)               # store through the stack
+        sp = sp - 1 + push
+        return (stack, visited, sp)
+
+    # FULL-scale trace (4000 nodes x 200 nbrs ~ 3 MB adjacency)
+    nf_nodes, nf_nbrs = 4000, 200
+    trng = np.random.default_rng(seed + 100)
+    m = 40_000
+    nodes = trng.integers(0, nf_nodes, m).astype(np.int64)
+    traces = {
+        "stack": MemAccess("stack",
+                           (trng.integers(0, 64, m) * 4).astype(np.int64)),
+        "adj": MemAccess("adj", (nodes * nf_nbrs * 4) + (1 << 24)),
+        "visited": MemAccess("visited", nodes * 4 + (1 << 23)),
+    }
+
+    return PaperKernel(
+        name="dfs",
+        loop_body=loop_body,
+        carry_example=(stack_j, visited_j, jnp.int32(1)),
+        body_args=(jnp.int32(0),),
+        regions={},
+        traces=traces,
+        n_iters_full=4000 * 200,
+        n_iters_sim=m,
+        instrs_per_iter=14.0,
+        mem_in_scc_regions=("arg0", "stack"),
+        expected=None,
+    )
+
+
+ALL_KERNELS = {
+    "spmv": make_spmv,
+    "knapsack": make_knapsack,
+    "floyd_warshall": make_floyd_warshall,
+    "dfs": make_dfs,
+}

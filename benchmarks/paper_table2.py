@@ -1,0 +1,69 @@
+"""Table II analogue: resource/area impact of the template.
+
+FPGA LUT/FF/BRAM numbers have no TPU meaning; the honest analogues are:
+
+  * per-variant op counts and channel (FIFO) count/width from the
+    partitioner — the paper's "communication channels always add cost";
+  * duplicated-op count (§III-B1 — compute traded for channels);
+  * XLA program size: HLO ops of the fused vs decoupled executor for each
+    kernel body (the "shallower per-stage pipeline" effect shows up as
+    per-stage program size).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from repro.core import CDFG, decouple, partition_cdfg
+from .paper_kernels import ALL_KERNELS
+
+
+def analyze_kernel(name: str, mk) -> dict:
+    k = mk()
+    cdfg = CDFG.from_loop_body(
+        k.loop_body, k.carry_example, *k.body_args,
+        nonaliasing_carries=k.nonaliasing_carries)
+    paper = partition_cdfg(cdfg, policy="paper")
+    fused = partition_cdfg(cdfg, policy="fused")
+    prog = decouple(paper)
+
+    chan_bytes = sum(c.nbytes for c in paper.channels)
+    return {
+        "kernel": name,
+        "nodes": len(cdfg.nodes),
+        "stages_dataflow": paper.num_stages,
+        "stages_conventional": fused.num_stages,
+        "channels": len(paper.channels),
+        "channel_bytes_per_token": chan_bytes,
+        "duplicated_ops": len(paper.duplicated),
+        "ops_per_stage": [sp.eqn_count for sp in prog.stages],
+        # area analogue: total op instances = original + duplicated copies
+        "op_instances_conventional": len(cdfg.nodes),
+        "op_instances_dataflow": len(cdfg.nodes) + sum(
+            len(v) for v in paper.duplicated.values()),
+    }
+
+
+def main(out_path: str | None = "experiments/paper_table2.json") -> dict:
+    rows = [analyze_kernel(n, mk) for n, mk in ALL_KERNELS.items()]
+    hdr = (f"{'kernel':<16}{'stages':>7}{'chans':>7}{'chanB':>7}"
+           f"{'dup':>5}{'ops(conv)':>10}{'ops(df)':>9}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['kernel']:<16}{r['stages_dataflow']:>7}"
+              f"{r['channels']:>7}{r['channel_bytes_per_token']:>7}"
+              f"{r['duplicated_ops']:>5}"
+              f"{r['op_instances_conventional']:>10}"
+              f"{r['op_instances_dataflow']:>9}")
+    if out_path:
+        import os
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rows, f, indent=1)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+  fig5    — Fig. 5 reproduction (conventional vs dataflow vs ARM baseline)
+  table2  — Table II analogue (stage/channel/duplication accounting)
+  kernels — Pallas-kernel micro-bench CSV (name,us_per_call,derived)
+  roofline— the (arch × shape) table from dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["fig2", "fig5", "table2", "kernels",
+                                "roofline"]
+
+    if "fig2" in sections:
+        print("=" * 72)
+        print("Fig. 2 reproduction — execution schedule (Gantt)")
+        print("=" * 72)
+        from . import fig2_schedule
+        fig2_schedule.main()
+        print()
+
+    if "fig5" in sections:
+        print("=" * 72)
+        print("Fig. 5 reproduction — conventional vs dataflow vs baseline")
+        print("=" * 72)
+        from . import paper_fig5
+        paper_fig5.main()
+
+    if "table2" in sections:
+        print("\n" + "=" * 72)
+        print("Table II analogue — stages / channels / duplication")
+        print("=" * 72)
+        from . import paper_table2
+        paper_table2.main()
+
+    if "kernels" in sections:
+        print("\n" + "=" * 72)
+        print("Kernel micro-benchmarks (CSV)")
+        print("=" * 72)
+        from . import kernel_bench
+        kernel_bench.main()
+
+    if "roofline" in sections:
+        print("\n" + "=" * 72)
+        print("Roofline (from dry-run artifacts)")
+        print("=" * 72)
+        from . import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

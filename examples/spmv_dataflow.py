@@ -1,0 +1,80 @@
+"""SpMV — the paper's flagship kernel, three ways.
+
+Run:  PYTHONPATH=src python examples/spmv_dataflow.py
+
+1. The HLS view: trace the CSR inner loop, let Algorithm 1 build the
+   pipeline (index fetch → value fetch → x gather → FMA), simulate it on
+   the Zynq memory model against the fused engine (Fig. 5, one kernel).
+2. The TPU view: the same decoupling as a Pallas BSR kernel — scalar-
+   prefetched block-column ids drive the data-dependent x-tile DMA
+   (interpret mode on CPU), validated against the dense product.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CDFG, partition_cdfg
+from repro.core.simulator import (MemAccess, acp, simulate_conventional,
+                                  simulate_dataflow)
+from repro.kernels import csr_to_bsr, spmv
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # ---- 1. HLS view -------------------------------------------------------
+    dim, density = 512, 0.25
+    dense = ((rng.random((dim, dim)) < density)
+             * rng.normal(size=(dim, dim))).astype(np.float32)
+    vals_np = dense[dense != 0]
+    cols_np = np.nonzero(dense)[1].astype(np.int32)
+    vals, cols = jnp.asarray(vals_np), jnp.asarray(cols_np)
+    x = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+
+    def inner_loop(acc, j):
+        c = cols[j]
+        v = vals[j]
+        return acc + v * x[c]
+
+    cdfg = CDFG.from_loop_body(inner_loop, jnp.float32(0), jnp.int32(0))
+    part = partition_cdfg(cdfg)
+    print(part.summary())
+
+    n = min(len(vals_np), 20_000)
+    traces = [MemAccess("cols", np.arange(n) * 4),
+              MemAccess("vals", np.arange(n) * 4 + (1 << 24)),
+              MemAccess("x", cols_np[:n].astype(np.int64) * 4 + (1 << 25))]
+    from repro.core.simulator import SimStage
+    df_stages, ti = [], 0
+    for s in part.stages:
+        n_mem = sum(1 for nid in s.node_ids
+                    if part.cdfg.node(nid).is_memory)
+        accs = traces[ti:ti + n_mem]
+        ti += n_mem
+        df_stages.append(SimStage(f"s{s.id}", ii=s.ii,
+                                  latency=max(1, s.latency),
+                                  accesses=accs))
+    conv = [SimStage("fused", ii=max(s.ii for s in df_stages),
+                     latency=sum(s.latency for s in df_stages),
+                     accesses=[a for s in df_stages for a in s.accesses])]
+    df = simulate_dataflow(df_stages, acp(), n, fifo_depth=32)
+    cv = simulate_conventional(conv, acp(), n)
+    print(f"\nZynq model, {n} nnz: conventional {cv.cycles_per_iter:.1f} "
+          f"cyc/nnz vs dataflow {df.cycles_per_iter:.1f} cyc/nnz "
+          f"→ {cv.cycles / df.cycles:.1f}x\n")
+
+    # ---- 2. TPU view -------------------------------------------------------
+    indptr = np.zeros(dim + 1, np.int64)
+    indptr[1:] = np.cumsum((dense != 0).sum(1))
+    bvals, bcols = csr_to_bsr(indptr, cols_np, vals_np, (dim, dim),
+                              bm=8, bk=128)
+    y = spmv(jnp.asarray(bvals), jnp.asarray(bcols), x)
+    np.testing.assert_allclose(np.asarray(y)[:dim], dense @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+    print(f"Pallas BSR SpMV (scalar-prefetch gather): OK — "
+          f"{bvals.shape[0]}x{bvals.shape[1]} blocks of "
+          f"{bvals.shape[2]}x{bvals.shape[3]}")
+
+
+if __name__ == "__main__":
+    main()

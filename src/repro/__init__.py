@@ -1,0 +1,17 @@
+"""repro — the dataflow architectural template (Cheng & Wawrzynek 2016)
+as a production JAX/TPU training & serving framework.
+
+Subpackages:
+  core       — CDFG partitioner (Algorithm 1), channels, pipeline executors,
+               fidelity simulator
+  kernels    — Pallas TPU kernels (decoupled access/execute) + oracles
+  models     — config-driven LM zoo (dense / MoE / hybrid / SSM)
+  configs    — the 10 assigned architectures (exact public configs)
+  optim      — sharded AdamW, schedules, int8 gradient compression
+  data       — prefetching input pipeline
+  checkpoint — atomic async checkpoints, resharding restore
+  runtime    — sharding rules, fault tolerance
+  launch     — mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

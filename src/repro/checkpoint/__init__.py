@@ -1,0 +1,5 @@
+"""Atomic, async, keep-N checkpoints with mesh-resharding restore."""
+
+from .checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

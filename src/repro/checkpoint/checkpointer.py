@@ -1,0 +1,153 @@
+"""Checkpointing: atomic, async, keep-N, mesh-resharding restore.
+
+Fault-tolerance contract (exercised by tests/test_fault_tolerance.py):
+
+* **atomic** — writes go to ``step_XXXX.tmp`` then ``os.replace`` to the
+  final name; a crash mid-write never corrupts the latest checkpoint.
+* **async** — ``save()`` snapshots to host memory synchronously (cheap)
+  and writes to disk on a background thread; ``wait()`` joins.
+* **keep-N** — older checkpoints garbage-collected after a successful
+  write (never before).
+* **resharding restore** — arrays are saved with their global shape; on
+  restore they are ``device_put`` against the *current* mesh's sharding,
+  so a job can come back on a different data-parallel size (elastic
+  scaling after losing a slice).
+
+Format: one ``.npz`` per checkpoint plus a JSON manifest (step, pytree
+structure, dtypes).  No orbax dependency in the image — this is a complete
+self-contained implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out.append((name, leaf))
+    return out
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        """Snapshot now, write in the background."""
+        self.wait()  # one in-flight write at a time
+        named = _flatten_with_names(state)
+        host = {name: np.asarray(leaf) for name, leaf in named}
+        treedef = jax.tree_util.tree_structure(state)
+        manifest = {
+            "step": int(step),
+            "treedef": str(treedef),
+            "names": [n for n, _ in named],
+        }
+
+        def write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+                final = os.path.join(self.directory, f"step_{step:08d}.npz")
+                with open(tmp, "wb") as f:
+                    np.savez(f, **host)
+                os.replace(tmp, final)
+                mtmp = os.path.join(self.directory,
+                                    f"step_{step:08d}.json.tmp")
+                mfinal = os.path.join(self.directory,
+                                      f"step_{step:08d}.json")
+                with open(mtmp, "w") as f:
+                    json.dump(manifest, f)
+                os.replace(mtmp, mfinal)
+                self._gc()
+            except BaseException as e:  # surfaced on next save/wait
+                self._error = e
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for ext in (".npz", ".json"):
+                p = os.path.join(self.directory, f"step_{s:08d}{ext}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    # -- restore ----------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for fn in os.listdir(self.directory):
+            m = re.match(r"step_(\d+)\.npz$", fn)
+            if m and os.path.exists(os.path.join(
+                    self.directory, f"step_{int(m.group(1)):08d}.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, example_state: Any, step: int | None = None,
+                *, shardings: Any | None = None) -> tuple[Any, int]:
+        """Restore into the structure of ``example_state``.
+
+        ``shardings``: optional pytree of NamedSharding congruent with the
+        state — arrays are placed per the *current* mesh (elastic restore).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}.npz")
+        data = np.load(path)
+        named = _flatten_with_names(example_state)
+        flat_shardings = (jax.tree_util.tree_leaves(shardings)
+                          if shardings is not None else [None] * len(named))
+        leaves = []
+        for (name, example), shard in zip(named, flat_shardings):
+            arr = data[name]
+            want = tuple(np.shape(example))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"{name}: checkpoint shape {arr.shape} != {want}")
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jnp.asarray(arr,
+                                          dtype=np.asarray(example).dtype))
+        treedef = jax.tree_util.tree_structure(example_state)
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

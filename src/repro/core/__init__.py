@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution as a composable JAX module.
+
+Pipeline:  trace (CDFG) → partition (Algorithm 1) → decouple (stage
+programs) → execute (systolic / pipeline-parallel) or simulate (Fig. 2/5).
+"""
+
+from .cdfg import CDFG, LatencyModel, MEMORY_PRIMITIVES, DEFAULT_LATENCY
+from .partition import Partition, Stage, Channel, partition_cdfg
+from .decouple import (DecoupledProgram, decouple, decoupled_call,
+                       run_stages_sequential)
+from .channels import ChannelSpec, DeviceFIFO, FIFOState, HostFIFO
+from .pipeline import (SystolicPipeline, pipeline_apply,
+                       pipeline_apply_emulated, gpipe_bubble_fraction)
+from . import simulator
+
+__all__ = [
+    "CDFG", "LatencyModel", "MEMORY_PRIMITIVES", "DEFAULT_LATENCY",
+    "Partition", "Stage", "Channel", "partition_cdfg",
+    "DecoupledProgram", "decouple", "decoupled_call",
+    "run_stages_sequential",
+    "ChannelSpec", "DeviceFIFO", "FIFOState", "HostFIFO",
+    "SystolicPipeline", "pipeline_apply", "pipeline_apply_emulated",
+    "gpipe_bubble_fraction",
+    "simulator",
+]

@@ -1,0 +1,397 @@
+"""CDFG construction from jaxprs — the front end of the dataflow template mapper.
+
+The paper (Cheng & Wawrzynek 2016) operates on the control-dataflow graph of a
+performance-critical loop nest, produced by the LLVM front end from C.  Our
+front end is ``jax.make_jaxpr``: the jaxpr of a step function (or of a loop
+body) plays the role of the LLVM IR in SSA form — it "facilitates dependency
+tracking between operations" exactly as §IV describes.
+
+Two views are provided:
+
+* :func:`CDFG.from_function` — acyclic dataflow graph of a traced function.
+  ``scan`` / ``while`` equations appear as single nodes: they are *already
+  collapsed SCCs* (the loop carry is the dependence cycle).
+* :func:`CDFG.from_loop_body` — the faithful §III view: the body of a loop is
+  traced, and back-edges are added from each carry output to the matching
+  carry input, recreating the cyclic CDFG on which Algorithm 1's
+  ``allStronglyConnComps`` runs for real.
+
+Memory-dependence edges (§III-A: "explicit edges between memory access
+operations are added") are inserted between memory operations that touch the
+same *region*.  Regions are discovered by tracing each memory primitive's
+operand back through layout-only ops to a jaxpr input, and can be overridden
+by user annotation — the analogue of the paper's user-guided alias results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.extend import core as jex_core
+
+# ---------------------------------------------------------------------------
+# Operation classification (the paper's "long latency" table, §III-A).
+#
+# The paper derives per-op latencies from Vivado HLS at a 150 MHz target:
+# a 32-bit integer add completes in one cycle, a floating point multiply
+# takes four.  The TPU analogue: VPU element-wise integer/logical ops are
+# "one cycle" (cheap, freely duplicable per §III-B1), while MXU contractions,
+# transcendentals, sorts and loop primitives are multi-cycle ("long").
+# ---------------------------------------------------------------------------
+
+#: primitives that perform data-dependent / strided memory traffic — the
+#: template's "memory operations".  On TPU these lower to HBM gathers /
+#: scatters / dynamic addressing, the ops whose latency the template hides.
+MEMORY_PRIMITIVES: frozenset[str] = frozenset({
+    "gather",
+    "scatter",
+    "scatter-add",
+    "scatter-mul",
+    "scatter-min",
+    "scatter-max",
+    "scatter_add",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "take",
+    "argsort",  # permutation materialization reads/writes HBM irregularly
+})
+
+#: default per-primitive latency (abstract cycles).  Anything > 1 is "long
+#: latency" in the Algorithm-1 sense.  Unlisted primitives default to 1.
+DEFAULT_LATENCY: dict[str, int] = {
+    # MXU / contraction
+    "dot_general": 8,
+    "conv_general_dilated": 8,
+    # transcendentals (VPU multi-pass)
+    "exp": 4, "log": 4, "log1p": 4, "tanh": 4, "logistic": 4, "erf": 4,
+    "sin": 4, "cos": 4, "pow": 4, "integer_pow": 2, "rsqrt": 4, "sqrt": 4,
+    "div": 4, "cbrt": 4, "exp2": 4,
+    # float multiply-class ops: the paper's canonical 4-cycle example
+    "mul": 4,
+    # reductions / scans are multi-pass
+    "reduce_sum": 2, "reduce_max": 2, "reduce_min": 2, "reduce_prod": 2,
+    "cumsum": 4, "cumlogsumexp": 4, "cummax": 4, "cumprod": 4,
+    "sort": 8, "top_k": 8,
+    # loop / control primitives carry their body's latency; treated long
+    "scan": 8, "while": 8, "cond": 2, "pjit": 8, "custom_call": 8,
+    # memory ops: the *issue* cost; the stall cost is the memory model's job
+    "gather": 2, "scatter": 2, "scatter-add": 2,
+    "dynamic_slice": 2, "dynamic_update_slice": 2,
+}
+
+#: layout-only primitives that are transparent when tracing a memory operand
+#: back to its root buffer.  In-place-update ops (scatter, dus) are also
+#: transparent on operand 0: the functional output aliases the input buffer,
+#: so loads from the updated array belong to the same memory region.
+_TRANSPARENT = frozenset({
+    "convert_element_type", "reshape", "transpose", "broadcast_in_dim",
+    "squeeze", "bitcast_convert_type", "copy", "rev", "slice",
+    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+    "dynamic_update_slice",
+})
+
+# integer "cheap" ops eligible for duplication instead of a channel (§III-B1)
+CHEAP_PRIMITIVES: frozenset[str] = frozenset({
+    "add", "sub", "and", "or", "xor", "not", "lt", "le", "gt", "ge", "eq",
+    "ne", "select_n", "max", "min", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "convert_element_type", "broadcast_in_dim",
+    "reshape", "squeeze", "iota", "concatenate", "pad", "slice", "transpose",
+    "rem", "sign", "neg", "abs", "floor", "ceil", "round", "clamp",
+})
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Maps primitives to abstract cycle latencies (paper §III-A).
+
+    ``table`` overrides :data:`DEFAULT_LATENCY`; ``default`` is used for
+    unknown primitives.  ``long_threshold`` is the Algorithm-1 cut: ops that
+    "cannot be completed within one clock cycle".
+    """
+
+    table: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    default: int = 1
+    long_threshold: int = 1
+
+    def latency(self, prim_name: str) -> int:
+        if prim_name in self.table:
+            return self.table[prim_name]
+        return DEFAULT_LATENCY.get(prim_name, self.default)
+
+    def is_long(self, prim_name: str) -> bool:
+        return self.latency(prim_name) > self.long_threshold
+
+
+@dataclasses.dataclass
+class Node:
+    """One CDFG node == one jaxpr equation (before SCC collapse)."""
+
+    id: int
+    prim: str
+    eqn: Any  # jex_core.JaxprEqn
+    is_memory: bool
+    latency: int
+    region: str | None = None  # memory region for memory ops
+    is_store: bool = False
+
+    @property
+    def is_long(self) -> bool:
+        return self.latency > 1
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        tag = "M" if self.is_memory else ("L" if self.is_long else ".")
+        return f"<n{self.id} {self.prim} [{tag}]>"
+
+
+@dataclasses.dataclass
+class Edge:
+    src: int
+    dst: int
+    var: Any | None  # jaxpr Var carried (None for memory-order edges)
+    kind: str = "data"  # "data" | "mem" | "carry"
+
+
+class CDFG:
+    """Control-dataflow graph over jaxpr equations.
+
+    Nodes are equations; edges are SSA def-use pairs plus explicit
+    memory-ordering edges and (for the loop view) carry back-edges.
+    """
+
+    def __init__(
+        self,
+        closed_jaxpr: Any,
+        nodes: list[Node],
+        edges: list[Edge],
+        invars: Sequence[Any],
+        outvars: Sequence[Any],
+        region_of_invar: Mapping[int, str],
+    ) -> None:
+        self.closed_jaxpr = closed_jaxpr
+        self.nodes = nodes
+        self.edges = edges
+        self.invars = list(invars)
+        self.outvars = list(outvars)
+        self.region_of_invar = dict(region_of_invar)
+        self._by_id = {n.id: n for n in nodes}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_function(
+        cls,
+        fn: Callable,
+        *example_args: Any,
+        latency_model: LatencyModel | None = None,
+        regions: Mapping[int, str] | None = None,
+        add_memory_edges: bool = True,
+        **example_kwargs: Any,
+    ) -> "CDFG":
+        closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+        return cls.from_jaxpr(
+            closed,
+            latency_model=latency_model,
+            regions=regions,
+            add_memory_edges=add_memory_edges,
+        )
+
+    @classmethod
+    def from_jaxpr(
+        cls,
+        closed_jaxpr: Any,
+        *,
+        latency_model: LatencyModel | None = None,
+        regions: Mapping[int, str] | None = None,
+        add_memory_edges: bool = True,
+        carry_pairs: Sequence[tuple[int, int]] = (),
+    ) -> "CDFG":
+        """Build the CDFG.  ``carry_pairs`` is a list of
+        ``(outvar_index, invar_index)`` pairs: a back-edge is added from the
+        producer of ``outvars[o]`` to every consumer of ``invars[i]``,
+        recreating loop-carried dependence cycles (the §III loop view)."""
+        lm = latency_model or LatencyModel()
+        jaxpr = closed_jaxpr.jaxpr
+
+        nodes: list[Node] = []
+        producer: dict[Any, int] = {}  # var -> node id
+        for i, eqn in enumerate(jaxpr.eqns):
+            prim = eqn.primitive.name
+            is_mem = prim in MEMORY_PRIMITIVES
+            node = Node(
+                id=i,
+                prim=prim,
+                eqn=eqn,
+                is_memory=is_mem,
+                latency=lm.latency(prim),
+                is_store=prim.startswith("scatter")
+                or prim == "dynamic_update_slice",
+            )
+            nodes.append(node)
+            for ov in eqn.outvars:
+                producer[ov] = i
+
+        edges: list[Edge] = []
+        for i, eqn in enumerate(jaxpr.eqns):
+            for iv in eqn.invars:
+                if isinstance(iv, jex_core.Literal):
+                    continue
+                if iv in producer:
+                    edges.append(Edge(producer[iv], i, iv, "data"))
+
+        # region discovery: walk each memory op's buffer operand back through
+        # layout ops to a jaxpr invar (or a closed-over constvar).
+        invar_index = {v: k for k, v in enumerate(jaxpr.invars)}
+        constvar_index = {v: k for k, v in enumerate(jaxpr.constvars)}
+        region_of_invar: dict[int, str] = dict(regions or {})
+
+        def root_invar(var: Any) -> int | None:
+            seen = 0
+            while True:
+                if var in invar_index:
+                    return invar_index[var]
+                if var in constvar_index:
+                    return -1 - constvar_index[var]  # consts: negative ids
+                pid = producer.get(var)
+                if pid is None:
+                    return None
+                peqn = nodes[pid].eqn
+                if peqn.primitive.name in _TRANSPARENT and peqn.invars:
+                    nxt = peqn.invars[0]
+                    if isinstance(nxt, jex_core.Literal):
+                        return None
+                    var = nxt
+                    seen += 1
+                    if seen > 100:
+                        return None
+                else:
+                    return None
+
+        for node in nodes:
+            if not node.is_memory or not node.eqn.invars:
+                continue
+            op0 = node.eqn.invars[0]
+            if isinstance(op0, jex_core.Literal):
+                continue
+            ridx = root_invar(op0)
+            if ridx is not None:
+                default = (f"arg{ridx}" if ridx >= 0
+                           else f"const{-1 - ridx}")
+                name = region_of_invar.get(ridx, default)
+                region_of_invar.setdefault(ridx, name)
+                node.region = name
+            else:
+                node.region = "_anon"
+
+        # §III-A: explicit ordering edges between memory ops of one region.
+        # Loads commute; stores serialize against everything in the region.
+        if add_memory_edges:
+            by_region: dict[str, list[Node]] = {}
+            for n in nodes:
+                if n.is_memory and n.region is not None:
+                    by_region.setdefault(n.region, []).append(n)
+            for reg_nodes in by_region.values():
+                reg_nodes.sort(key=lambda n: n.id)
+                last_store: Node | None = None
+                loads_since_store: list[Node] = []
+                for n in reg_nodes:
+                    if n.is_store:
+                        if last_store is not None:
+                            edges.append(Edge(last_store.id, n.id, None, "mem"))
+                        for ld in loads_since_store:
+                            edges.append(Edge(ld.id, n.id, None, "mem"))
+                        last_store = n
+                        loads_since_store = []
+                    else:
+                        if last_store is not None:
+                            edges.append(Edge(last_store.id, n.id, None, "mem"))
+                        loads_since_store.append(n)
+
+        # loop-carried back-edges (the §III faithful view)
+        for out_idx, in_idx in carry_pairs:
+            ov = jaxpr.outvars[out_idx]
+            if isinstance(ov, jex_core.Literal) or ov not in producer:
+                continue
+            src = producer[ov]
+            iv = jaxpr.invars[in_idx]
+            for j, eqn in enumerate(jaxpr.eqns):
+                if any((not isinstance(x, jex_core.Literal)) and x is iv
+                       for x in eqn.invars):
+                    edges.append(Edge(src, j, None, "carry"))
+
+        return cls(closed_jaxpr, nodes, edges, jaxpr.invars, jaxpr.outvars,
+                   region_of_invar)
+
+    @classmethod
+    def from_loop_body(
+        cls,
+        body_fn: Callable,
+        carry_example: Any,
+        *xs_example: Any,
+        latency_model: LatencyModel | None = None,
+        regions: Mapping[int, str] | None = None,
+        nonaliasing_carries: Sequence[int] = (),
+    ) -> "CDFG":
+        """Trace ``body_fn(carry, *xs) -> new_carry`` and add carry
+        back-edges so loop-carried dependence becomes a real cycle.
+
+        ``carry_example`` may be a pytree; every leaf becomes one carry pair.
+
+        ``nonaliasing_carries`` is the paper's §III-A *user annotation*:
+        carried arrays whose per-iteration writes provably do not feed the
+        reads of nearby iterations (Floyd–Warshall's dist within one k pass,
+        knapsack's previous DP row).  Conservative alias analysis would
+        serialize them; the annotation drops their back-edge so Algorithm 1
+        can pipeline across the false dependence.
+        """
+        closed = jax.make_jaxpr(body_fn)(carry_example, *xs_example)
+        n_carry = len(jax.tree_util.tree_leaves(carry_example))
+        skip = set(nonaliasing_carries)
+        carry_pairs = [(i, i) for i in range(n_carry) if i not in skip]
+        return cls.from_jaxpr(
+            closed,
+            latency_model=latency_model,
+            regions=regions,
+            carry_pairs=carry_pairs,
+        )
+
+    # -- queries ------------------------------------------------------------
+
+    def node(self, nid: int) -> Node:
+        return self._by_id[nid]
+
+    def successors(self, nid: int) -> Iterable[int]:
+        return (e.dst for e in self.edges if e.src == nid)
+
+    def to_networkx(self):
+        import networkx as nx
+
+        g = nx.MultiDiGraph()
+        for n in self.nodes:
+            g.add_node(n.id, prim=n.prim, is_memory=n.is_memory,
+                       latency=n.latency, region=n.region)
+        for e in self.edges:
+            g.add_edge(e.src, e.dst, kind=e.kind)
+        return g
+
+    @property
+    def memory_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.is_memory]
+
+    @property
+    def long_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.is_long]
+
+    def summary(self) -> str:
+        lines = [f"CDFG: {len(self.nodes)} nodes, {len(self.edges)} edges, "
+                 f"{len(self.memory_nodes)} memory ops, "
+                 f"{len(self.long_nodes)} long-latency ops"]
+        for n in self.nodes:
+            tag = "MEM" if n.is_memory else ("LONG" if n.is_long else "")
+            reg = f" region={n.region}" if n.region else ""
+            lines.append(f"  n{n.id:<3} {n.prim:<24} lat={n.latency}"
+                         f" {tag}{reg}")
+        return "\n".join(lines)

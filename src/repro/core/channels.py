@@ -1,0 +1,247 @@
+"""FIFO channels — the template's communication primitive (§II, §III-A).
+
+Three realizations of the paper's FIFO, one per level of the TPU stack:
+
+* :class:`ChannelSpec` — packs an arbitrary pytree payload into a flat
+  ``uint32`` transport word so heterogeneous stage boundaries can share one
+  physical channel (the pipeline executor ships one fixed-width word per tick
+  via ``lax.ppermute``; bitcasting is free on TPU).
+* :class:`DeviceFIFO` — a bounded ring buffer materialized as a device array
+  (functional push/pop), used for depth>1 channels inside scanned loops:
+  this is the direct analogue of the BRAM FIFO between two accelerator
+  stages.
+* :class:`HostFIFO` — a bounded, thread-backed queue for the input pipeline
+  (host → device prefetch), giving the data-loading stage the same decoupled
+  producer/consumer behaviour the paper gives memory stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Payload packing
+# ---------------------------------------------------------------------------
+
+def _words_for(aval_shape: Sequence[int], dtype: np.dtype) -> int:
+    n = int(np.prod(aval_shape)) if len(aval_shape) else 1
+    nbytes = n * np.dtype(dtype).itemsize
+    return (nbytes + 3) // 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: tuple[int, ...]
+    dtype: Any
+    words: int
+
+
+@dataclasses.dataclass
+class ChannelSpec:
+    """Pack/unpack a fixed-structure pytree to/from a flat uint32 word."""
+
+    treedef: Any
+    leaves: list[LeafSpec]
+    width: int  # total uint32 words
+
+    @classmethod
+    def from_example(cls, example: Any) -> "ChannelSpec":
+        flat, treedef = jax.tree_util.tree_flatten(example)
+        leaves = []
+        for x in flat:
+            x = jnp.asarray(x)
+            leaves.append(LeafSpec(tuple(x.shape), x.dtype,
+                                   _words_for(x.shape, x.dtype)))
+        width = sum(l.words for l in leaves)
+        return cls(treedef, leaves, width)
+
+    def pack(self, payload: Any, pad_to: int | None = None) -> jax.Array:
+        flat = jax.tree_util.tree_leaves(payload)
+        words = []
+        for spec, x in zip(self.leaves, flat):
+            x = jnp.asarray(x, spec.dtype).reshape(-1)
+            itemsize = np.dtype(spec.dtype).itemsize
+            if itemsize == 4:
+                w = jax.lax.bitcast_convert_type(x, jnp.uint32)
+            elif itemsize == 2:
+                w16 = jax.lax.bitcast_convert_type(x, jnp.uint16)
+                if w16.size % 2:
+                    w16 = jnp.concatenate([w16, jnp.zeros((1,), jnp.uint16)])
+                w = (w16[0::2].astype(jnp.uint32)
+                     | (w16[1::2].astype(jnp.uint32) << 16))
+            elif itemsize == 1:
+                w8 = jax.lax.bitcast_convert_type(x, jnp.uint8)
+                pad = (-w8.size) % 4
+                if pad:
+                    w8 = jnp.concatenate([w8, jnp.zeros((pad,), jnp.uint8)])
+                w8 = w8.reshape(-1, 4).astype(jnp.uint32)
+                w = (w8[:, 0] | (w8[:, 1] << 8) | (w8[:, 2] << 16)
+                     | (w8[:, 3] << 24))
+            elif itemsize == 8:
+                w64 = jax.lax.bitcast_convert_type(x, jnp.uint64) \
+                    if x.dtype != jnp.uint64 else x
+                w = jnp.stack([(w64 & 0xFFFFFFFF).astype(jnp.uint32),
+                               (w64 >> 32).astype(jnp.uint32)],
+                              axis=-1).reshape(-1)
+            else:  # pragma: no cover
+                raise NotImplementedError(f"itemsize {itemsize}")
+            words.append(w)
+        out = (jnp.concatenate(words) if words
+               else jnp.zeros((0,), jnp.uint32))
+        if pad_to is not None and pad_to > out.size:
+            out = jnp.concatenate(
+                [out, jnp.zeros((pad_to - out.size,), jnp.uint32)])
+        return out
+
+    def unpack(self, word: jax.Array) -> Any:
+        flat = []
+        off = 0
+        for spec in self.leaves:
+            w = word[off:off + spec.words]
+            off += spec.words
+            n = int(np.prod(spec.shape)) if spec.shape else 1
+            itemsize = np.dtype(spec.dtype).itemsize
+            if itemsize == 4:
+                x = jax.lax.bitcast_convert_type(w, spec.dtype)
+            elif itemsize == 2:
+                lo = (w & 0xFFFF).astype(jnp.uint16)
+                hi = (w >> 16).astype(jnp.uint16)
+                x16 = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+                x = jax.lax.bitcast_convert_type(x16, spec.dtype)
+            elif itemsize == 1:
+                b = jnp.stack([(w >> s) & 0xFF for s in (0, 8, 16, 24)],
+                              axis=-1).reshape(-1)[:n].astype(jnp.uint8)
+                x = jax.lax.bitcast_convert_type(b, spec.dtype)
+            elif itemsize == 8:
+                lo = w[0::2].astype(jnp.uint64)
+                hi = w[1::2].astype(jnp.uint64)
+                x64 = lo | (hi << 32)
+                x = (x64 if spec.dtype == jnp.uint64
+                     else jax.lax.bitcast_convert_type(x64, spec.dtype))
+            else:  # pragma: no cover
+                raise NotImplementedError(f"itemsize {itemsize}")
+            flat.append(x[:n].reshape(spec.shape))
+        return jax.tree_util.tree_unflatten(self.treedef, flat)
+
+
+# ---------------------------------------------------------------------------
+# Device-side bounded FIFO (functional ring buffer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FIFOState:
+    buf: jax.Array    # (depth, width) uint32
+    head: jax.Array   # scalar int32: next pop position
+    count: jax.Array  # scalar int32: occupancy
+
+
+class DeviceFIFO:
+    """Bounded FIFO over fixed-width uint32 words, usable inside scan.
+
+    Functional: every op returns a new :class:`FIFOState`.  Push on a full
+    FIFO and pop on an empty one are guarded by the caller via
+    :meth:`can_push` / :meth:`can_pop` masks (backpressure — §II's bounded
+    channels are what localize stalls).
+    """
+
+    def __init__(self, depth: int, width: int):
+        self.depth = depth
+        self.width = width
+
+    def init(self) -> FIFOState:
+        return FIFOState(
+            buf=jnp.zeros((self.depth, self.width), jnp.uint32),
+            head=jnp.zeros((), jnp.int32),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def can_push(self, s: FIFOState) -> jax.Array:
+        return s.count < self.depth
+
+    def can_pop(self, s: FIFOState) -> jax.Array:
+        return s.count > 0
+
+    def push(self, s: FIFOState, word: jax.Array,
+             enable: jax.Array | bool = True) -> FIFOState:
+        enable = jnp.asarray(enable) & self.can_push(s)
+        tail = (s.head + s.count) % self.depth
+        buf = jax.lax.cond(
+            enable,
+            lambda: jax.lax.dynamic_update_index_in_dim(
+                s.buf, word.astype(jnp.uint32), tail, 0),
+            lambda: s.buf,
+        )
+        return FIFOState(buf, s.head,
+                         s.count + enable.astype(jnp.int32))
+
+    def pop(self, s: FIFOState,
+            enable: jax.Array | bool = True) -> tuple[jax.Array, FIFOState]:
+        enable = jnp.asarray(enable) & self.can_pop(s)
+        word = jax.lax.dynamic_index_in_dim(s.buf, s.head, 0,
+                                            keepdims=False)
+        new_head = jnp.where(enable, (s.head + 1) % self.depth, s.head)
+        return word, FIFOState(s.buf, new_head,
+                               s.count - enable.astype(jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    FIFOState, data_fields=["buf", "head", "count"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Host-side bounded prefetch FIFO (input pipeline decoupling)
+# ---------------------------------------------------------------------------
+
+class HostFIFO:
+    """Producer thread fills a bounded queue; consumer iterates.
+
+    Applies the template to the host→device boundary: data production
+    (tokenization, sharding, H2D transfer) is its own pipeline stage whose
+    latency is hidden as long as the queue is non-empty, exactly like a
+    memory-access stage feeding a compute stage in §II.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, source: Iterator[Any], depth: int = 4,
+                 transform: Callable[[Any], Any] | None = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._source = source
+        self._transform = transform
+        self._err: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for item in self._source:
+                if self._transform is not None:
+                    item = self._transform(item)
+                self._q.put(item)
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+        finally:
+            self._q.put(self._SENTINEL)
+
+    def __iter__(self) -> "HostFIFO":
+        return self
+
+    def __next__(self) -> Any:
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    @property
+    def occupancy(self) -> int:
+        return self._q.qsize()

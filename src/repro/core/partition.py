@@ -1,0 +1,336 @@
+"""Algorithm 1 — partitioning the CDFG onto the dataflow template (§III-A).
+
+Faithful transcription of the paper's pseudocode::
+
+    procedure PartitionCDFG(G)
+        SCCs            <- allStronglyConnComps(G)
+        DAG             <- collapse(SCCs, G)
+        TopoSortedNodes <- topologicalSort(DAG)
+        LongSCCs        <- getSCCWithLongOp(SCCs)
+        MemNodes        <- findLdStNodes(G)
+        MemLongSCC      <- LongSCCs ∪ MemNodes
+        allStages <- {};  curStage <- {}
+        while TopoSortedNodes ≠ ∅:
+            curNode  <- TopoSortedNodes.pop()
+            curStage <- curStage ∪ curNode
+            if curNode ∈ MemLongSCC:
+                allStages <- allStages ∪ curStage
+                curStage  <- {}
+        return allStages
+
+Notes kept from the paper:
+
+* SCCs are never split across stages — channels add latency, which would
+  inflate the initiation interval of the loop they embody (§III, citing
+  decoupled software pipelining [7]).
+* A new stage is cut **after** every memory operation or long-latency SCC,
+  which (a) pipelines many outstanding requests into the memory subsystem and
+  (b) localizes stalls (§III-B2).
+* The pseudocode drops a trailing non-empty ``curStage``; we append it (the
+  intended behaviour — otherwise pure-sink cheap ops would vanish).
+
+Beyond-paper policies (kept separate, selected via ``policy=``):
+
+* ``"fused"``      — everything in one stage: the conventional-HLS end of the
+  spectrum (§II); this is the baseline the paper compares against.
+* ``"maximal"``    — one stage per node: the fine-grained dataflow machine end.
+* ``"cost_aware"`` — Algorithm 1, then merges adjacent stages whose channel
+  cost exceeds the stall-localization benefit (FIFO area vs duplication,
+  §III-B1 generalized with a cost model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import networkx as nx
+
+from .cdfg import CDFG, CHEAP_PRIMITIVES, LatencyModel, Node
+
+
+@dataclasses.dataclass
+class Stage:
+    """One stage of the dataflow pipeline template."""
+
+    id: int
+    node_ids: list[int]
+    has_memory: bool
+    has_long: bool
+    #: abstract cycle cost of the stage body (sum of op latencies)
+    latency: int
+    #: min initiation interval imposed by dependence cycles inside the stage
+    ii: int
+    #: memory regions this stage touches (paper: one access interface each)
+    regions: tuple[str, ...]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        tags = []
+        if self.has_memory:
+            tags.append("MEM")
+        if self.has_long:
+            tags.append("LONG")
+        return (f"<Stage {self.id}: {len(self.node_ids)} ops lat={self.latency}"
+                f" ii={self.ii} {'|'.join(tags)}>")
+
+
+@dataclasses.dataclass
+class Channel:
+    """A FIFO channel between two stages (one per crossing var)."""
+
+    src_stage: int
+    dst_stage: int
+    var: Any | None            # jaxpr var carried; None => pure ordering token
+    nbytes: int                # payload width per token
+    kind: str = "data"
+
+
+@dataclasses.dataclass
+class Partition:
+    cdfg: CDFG
+    stages: list[Stage]
+    channels: list[Channel]
+    stage_of_node: dict[int, int]
+    #: nodes replicated into later stages instead of channeled (§III-B1)
+    duplicated: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    def summary(self) -> str:
+        lines = [f"Partition: {self.num_stages} stages, "
+                 f"{len(self.channels)} channels"]
+        for s in self.stages:
+            prims = [self.cdfg.node(n).prim for n in s.node_ids]
+            lines.append(f"  stage {s.id}: {prims} "
+                         f"(mem={s.has_memory} long={s.has_long} "
+                         f"ii={s.ii} lat={s.latency})")
+        for c in self.channels:
+            v = "token" if c.var is None else str(c.var)
+            lines.append(f"  chan s{c.src_stage}->s{c.dst_stage} {v} "
+                         f"{c.nbytes}B")
+        if self.duplicated:
+            lines.append(f"  duplicated nodes: {self.duplicated}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _var_nbytes(var: Any) -> int:
+    aval = var.aval
+    import numpy as np
+
+    return int(np.prod(aval.shape)) * aval.dtype.itemsize if aval.shape else (
+        aval.dtype.itemsize)
+
+
+def _scc_cycle_latency(cdfg: CDFG, scc: set[int]) -> int:
+    """Latency of the dependence cycle inside an SCC (lower-bounds its II)."""
+    if len(scc) == 1:
+        nid = next(iter(scc))
+        has_self = any(e.src == nid and e.dst == nid for e in cdfg.edges)
+        return cdfg.node(nid).latency if has_self else 0
+    return sum(cdfg.node(n).latency for n in scc)
+
+
+def partition_cdfg(
+    cdfg: CDFG,
+    *,
+    policy: str = "paper",
+    latency_model: LatencyModel | None = None,
+    duplicate_cheap: bool = True,
+    channel_cost_bytes: int = 4096,
+) -> Partition:
+    """Map a CDFG to the dataflow architectural template.
+
+    policy:
+      "paper"      — Algorithm 1 verbatim.
+      "fused"      — single stage (the conventional accelerator).
+      "maximal"    — one node per stage (fine-grained dataflow machine).
+      "cost_aware" — Algorithm 1 + channel-cost driven stage merging.
+    """
+    lm = latency_model or LatencyModel()
+
+    g = nx.DiGraph()
+    for n in cdfg.nodes:
+        g.add_node(n.id)
+    for e in cdfg.edges:
+        g.add_edge(e.src, e.dst)
+
+    # --- Algorithm 1 lines 2-3: SCCs and condensation -----------------------
+    sccs = [set(c) for c in nx.strongly_connected_components(g)]
+    scc_of_node: dict[int, int] = {}
+    for k, comp in enumerate(sccs):
+        for nid in comp:
+            scc_of_node[nid] = k
+    dag = nx.DiGraph()
+    dag.add_nodes_from(range(len(sccs)))
+    for e in cdfg.edges:
+        a, b = scc_of_node[e.src], scc_of_node[e.dst]
+        if a != b:
+            dag.add_edge(a, b)
+
+    # --- line 4: deterministic topological sort ----------------------------
+    order = list(nx.lexicographical_topological_sort(
+        dag, key=lambda k: min(sccs[k])))
+
+    # --- lines 5-7: classification ------------------------------------------
+    def scc_has_long(k: int) -> bool:
+        return any(cdfg.node(n).is_long for n in sccs[k])
+
+    def scc_has_mem(k: int) -> bool:
+        return any(cdfg.node(n).is_memory for n in sccs[k])
+
+    mem_long = {k for k in range(len(sccs))
+                if scc_has_long(k) or scc_has_mem(k)}
+
+    # --- stage assignment ----------------------------------------------------
+    if policy == "fused":
+        groups = [list(range(len(sccs)))] if sccs else []
+    elif policy == "maximal":
+        groups = [[k] for k in order]
+    else:  # "paper" and "cost_aware" start from Algorithm 1
+        groups = []
+        cur: list[int] = []
+        for k in order:
+            cur.append(k)
+            if k in mem_long:
+                groups.append(cur)
+                cur = []
+        if cur:  # trailing stage (pseudocode omission, see module docstring)
+            groups.append(cur)
+
+    if policy == "cost_aware" and len(groups) > 1:
+        groups = _merge_costly_boundaries(
+            cdfg, sccs, groups, channel_cost_bytes)
+
+    # --- materialize stages ---------------------------------------------------
+    stages: list[Stage] = []
+    stage_of_node: dict[int, int] = {}
+    for sid, grp in enumerate(groups):
+        node_ids = sorted(n for k in grp for n in sccs[k])
+        for nid in node_ids:
+            stage_of_node[nid] = sid
+        ii = max([1] + [_scc_cycle_latency(cdfg, sccs[k]) for k in grp])
+        regions = tuple(sorted({cdfg.node(n).region for n in node_ids
+                                if cdfg.node(n).region}))
+        stages.append(Stage(
+            id=sid,
+            node_ids=node_ids,
+            has_memory=any(cdfg.node(n).is_memory for n in node_ids),
+            has_long=any(cdfg.node(n).is_long for n in node_ids),
+            latency=sum(cdfg.node(n).latency for n in node_ids),
+            ii=ii,
+            regions=regions,
+        ))
+
+    part = Partition(cdfg, stages, [], stage_of_node)
+
+    # --- §III-B1: duplicate cheap SCCs instead of cutting a channel ----------
+    if duplicate_cheap and policy not in ("fused",):
+        _duplicate_cheap_sccs(part, sccs, scc_of_node)
+
+    part.channels = _derive_channels(part)
+    return part
+
+
+def _merge_costly_boundaries(
+    cdfg: CDFG,
+    sccs: list[set[int]],
+    groups: list[list[int]],
+    channel_cost_bytes: int,
+) -> list[list[int]]:
+    """Cost-aware refinement: merge a stage boundary when the bytes that
+    would cross it exceed ``channel_cost_bytes`` *and* neither side contains
+    a memory op (merging memory stages would defeat stall localization)."""
+    scc_of_node = {n: k for k, comp in enumerate(sccs) for n in comp}
+    changed = True
+    while changed and len(groups) > 1:
+        changed = False
+        for b in range(len(groups) - 1):
+            left = {n for k in groups[b] for n in sccs[k]}
+            right = {n for k in groups[b + 1] for n in sccs[k]}
+            left_mem = any(cdfg.node(n).is_memory for n in left)
+            right_mem = any(cdfg.node(n).is_memory for n in right)
+            if left_mem or right_mem:
+                continue
+            xbytes = 0
+            seen = set()
+            for e in cdfg.edges:
+                if e.var is None or e.var in seen:
+                    continue
+                if e.src in left and e.dst in right:
+                    xbytes += _var_nbytes(e.var)
+                    seen.add(e.var)
+            if xbytes > channel_cost_bytes:
+                groups[b] = groups[b] + groups[b + 1]
+                del groups[b + 1]
+                changed = True
+                break
+    # keep scc_of_node referenced for clarity (deterministic rebuild upstream)
+    del scc_of_node
+    return groups
+
+
+def _duplicate_cheap_sccs(
+    part: Partition,
+    sccs: list[set[int]],
+    scc_of_node: dict[int, int],
+) -> None:
+    """§III-B1: frequently-occurring cheap SCCs (loop counters and other
+    single-cycle integer ops) are replicated into consumer stages rather than
+    paying for a FIFO.  Long-latency ops and memory accesses are never
+    duplicated (paper rule)."""
+    cdfg = part.cdfg
+    for node in cdfg.nodes:
+        if node.is_memory or node.is_long:
+            continue
+        if node.prim not in CHEAP_PRIMITIVES:
+            continue
+        src_stage = part.stage_of_node[node.id]
+        consumer_stages = sorted({
+            part.stage_of_node[e.dst]
+            for e in cdfg.edges
+            if e.src == node.id and e.var is not None
+            and part.stage_of_node[e.dst] != src_stage
+        })
+        if not consumer_stages:
+            continue
+        # only duplicate if every producer feeding this node is available in
+        # the consumer stage (i.e. its inputs are jaxpr invars or themselves
+        # duplicable/visible) — conservative: inputs must be graph inputs.
+        feeders = [e for e in cdfg.edges if e.dst == node.id
+                   and e.var is not None]
+        if feeders:
+            continue
+        part.duplicated[node.id] = consumer_stages
+
+
+def _derive_channels(part: Partition) -> list[Channel]:
+    """Every dependence edge crossing a stage boundary becomes a FIFO channel
+    (§III-A last ¶): one channel per (var, src, dst) triple; memory-order
+    edges become zero-width token channels."""
+    seen: set[tuple[int, int, Any]] = set()
+    channels: list[Channel] = []
+    for e in part.cdfg.edges:
+        s_src = part.stage_of_node.get(e.src)
+        s_dst = part.stage_of_node.get(e.dst)
+        if s_src is None or s_dst is None or s_src == s_dst:
+            continue
+        # duplicated producers don't need a channel into their consumers
+        if e.src in part.duplicated and s_dst in part.duplicated[e.src]:
+            continue
+        key = (s_src, s_dst, e.var)
+        if key in seen:
+            continue
+        seen.add(key)
+        channels.append(Channel(
+            src_stage=s_src,
+            dst_stage=s_dst,
+            var=e.var,
+            nbytes=_var_nbytes(e.var) if e.var is not None else 0,
+            kind=e.kind,
+        ))
+    return channels

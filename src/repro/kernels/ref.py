@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (interpret=True on CPU, real lowering on TPU).  No Pallas imports
+here — these must stay trivially correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x: jax.Array, w: jax.Array,
+               out_dtype: jnp.dtype | None = None) -> jax.Array:
+    """Plain matmul with fp32 accumulation."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def spmv_bsr_ref(values: jax.Array, col_ids: jax.Array, x: jax.Array,
+                 nrows: int) -> jax.Array:
+    """Block-sparse-row SpMV.
+
+    values : (n_block_rows, nnz_blocks, bm, bk) stored blocks
+    col_ids: (n_block_rows, nnz_blocks) int32 — block-column of each stored
+             block; −1 marks padding blocks (contribute zero).
+    x      : (K,) dense vector; K = n_block_cols * bk
+    returns: (nrows,) = A @ x with fp32 accumulation.
+    """
+    nbr, nnz, bm, bk = values.shape
+    xb = x.reshape(-1, bk)  # (n_block_cols, bk)
+    valid = (col_ids >= 0)
+    cols = jnp.where(valid, col_ids, 0)
+    gathered = xb[cols]                              # (nbr, nnz, bk)
+    gathered = jnp.where(valid[..., None], gathered, 0)
+    y = jnp.einsum("rnmk,rnk->rm", values.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return y.reshape(-1)[:nrows].astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle.  q,k,v: (B, H, S, d) (same H — GQA
+    expansion happens in the wrapper)."""
+    *_, Sq, d = q.shape
+    Sk = k.shape[-2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, lengths: jax.Array,
+                         *, scale: float | None = None) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q       : (B, H, d) — one new query token per sequence
+    k_cache : (B, H, S, d), v_cache: (B, H, S, d)
+    lengths : (B,) int32 — valid cache length per sequence
+    """
+    B, H, S, d = k_cache.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+            ).astype(x.dtype)

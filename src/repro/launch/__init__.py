@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, dry-run, train and serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
+and must only run as __main__ in its own process.
+"""
+
+from .mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_debug_mesh", "make_production_mesh"]

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production mesh needs 512 placeholder devices.  Do not import
+this module from tests or benches (they must see one device).
+
+Per cell this produces:
+  * compiled.memory_analysis()  — proves the program fits (bytes/device)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective byte counts      — parsed from the compiled HLO
+  * the three roofline terms (compute / memory / collective, seconds)
+
+Results are appended to experiments/dryrun/<cell>.json for the roofline
+table and EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_is_applicable,
+                                load_config)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.runtime.sharding import (HBM_BW, HBM_BYTES_PER_CHIP,
+                                    ICI_BW_PER_LINK, PEAK_FLOPS_BF16)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string like 'bf16[8,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g.:  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+        m = re.match(r"[%\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+                     r"([\w\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                out[c] += _parse_bytes(m.group(1))
+                out["count"][c] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    """The three per-step time lower bounds (seconds).
+
+    All inputs are PER-PARTITION quantities: XLA's cost_analysis on an SPMD
+    module reports the per-device program (verified empirically: an 8-way
+    sharded matmul reports 1/8th of the single-device flops), and the parsed
+    HLO is likewise the per-device program.
+    """
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = coll_bytes / ICI_BW_PER_LINK
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             save: bool = True, variant: str | None = None,
+             overrides: dict | None = None,
+             ep_serve: bool = False) -> dict:
+    """``variant``/``overrides``/``ep_serve`` support the §Perf hillclimb:
+    overrides are dataclasses.replace'd onto the config (e.g.
+    ``{"mla_absorbed": True, "kv_cache_dtype": "int8"}``)."""
+    import dataclasses as _dc
+
+    cfg = load_config(arch)
+    if overrides:
+        moe_over = overrides.pop("moe", None)
+        if moe_over and cfg.moe is not None:
+            cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, **moe_over))
+        if overrides:
+            cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    if variant:
+        cell += f"__{variant}"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": n_chips, "variant": variant}
+
+    if not cell_is_applicable(cfg, shape):
+        rec["status"] = "skip"
+        rec["reason"] = ("long_500k requires sub-quadratic decode; "
+                         f"{arch} is pure full-attention")
+        return _save(rec, cell, out_dir, save)
+
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(cfg, shape, mesh, ep_serve=ep_serve)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec["hlo_flops"] = flops
+        rec["hlo_bytes"] = bytes_acc
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("generated_code_size_in_bytes",
+                         "argument_size_in_bytes",
+                         "output_size_in_bytes",
+                         "temp_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[f"mem_{attr}"] = int(v)
+
+        hlo = compiled.as_text()
+        rec["coll"] = collective_bytes(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+
+        # analytic per-device weights+state bytes (the fit check)
+        rec["fit"] = _fit_analysis(cfg, shape, n_chips)
+
+        # roofline: cost_analysis + HLO text are already per-partition
+        rec["roofline"] = roofline_terms(flops, bytes_acc,
+                                         rec["coll"]["total"], n_chips)
+        # model-FLOPs utilization context (6·N·D train / 2·N·D inference,
+        # N = active params for MoE) — global, so compare against
+        # n_chips × per-device HLO flops.
+        N = (cfg.active_param_count() if cfg.moe is not None
+             else cfg.param_count())
+        toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+        mult = 6 if shape.kind == "train" else 2
+        rec["model_flops"] = float(mult * N * toks)
+        rec["model_vs_hlo_flops"] = (rec["model_flops"]
+                                     / (flops * n_chips)
+                                     if flops else None)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return _save(rec, cell, out_dir, save)
+
+
+def _fit_analysis(cfg, shape, n_chips: int) -> dict:
+    """Analytic bytes/chip for weights (+opt state if train, +cache if
+    decode), assuming the 2-D sharding spreads params over all chips."""
+    pbytes = cfg.param_count() * 2  # bf16
+    out = {"param_bytes_global": pbytes}
+    if shape.kind == "train":
+        state = pbytes + cfg.param_count() * 4 * 2  # fp32 m+v
+        per_chip = state / n_chips
+        out["train_state_per_chip"] = per_chip
+        out["fits_hbm"] = bool(per_chip < 0.9 * HBM_BYTES_PER_CHIP)
+        if not out["fits_hbm"]:
+            need = int(np.ceil(state / (0.9 * HBM_BYTES_PER_CHIP) / 256))
+            out["pods_needed"] = need
+    else:
+        per_chip = pbytes / min(n_chips, 256)
+        out["serve_params_per_chip"] = per_chip
+        out["fits_hbm"] = bool(per_chip < 0.9 * HBM_BYTES_PER_CHIP)
+    return out
+
+
+def _save(rec: dict, cell: str, out_dir: str, save: bool) -> dict:
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{cell}.json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" flops={rec['hlo_flops']:.3g}"
+                 f" coll={rec['coll']['total']:.3g}B"
+                 f" dom={r['dominant']}"
+                 f" compile={rec.get('compile_s')}s")
+    elif status == "error":
+        extra = " " + rec["error"][:120]
+    print(f"[{status:5s}] {cell}{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all", help="arch id or 'all'")
+    p.add_argument("--shape", default="all",
+                   help="shape name or 'all'")
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--seq-parallel", action="store_true",
+                   help="apply sequence-parallel activation constraints "
+                        "(§Perf B3 — measured 7.7x less wire traffic)")
+    args = p.parse_args()
+
+    ctx = None
+    if args.seq_parallel:
+        from repro.runtime.sharding import sequence_parallel
+        ctx = sequence_parallel()
+        ctx.__enter__()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skip"
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

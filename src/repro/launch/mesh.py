@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init; tests
+and benches must keep seeing one device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production topology: 16×16 = 256 chips per pod; 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for subprocess tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

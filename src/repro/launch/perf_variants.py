@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower the three chosen cells with each
+optimization variant and record the artifacts next to the baselines.
+
+Cells (chosen per the spec from the baseline roofline table):
+  A. deepseek-v3-671b × decode_32k  — worst roofline fraction
+  B. deepseek-v3-671b × train_4k    — most collective-bound
+  C. qwen2.5-14b × decode_32k       — most representative of the paper's
+                                       technique (decode = the decoupled
+                                       memory stage)
+"""
+
+from repro.launch.dryrun import run_cell
+
+VARIANTS = [
+    # cell A
+    ("deepseek-v3-671b", "decode_32k", "absorbed",
+     {"mla_absorbed": True}, False),
+    ("deepseek-v3-671b", "decode_32k", "absorbed_ep",
+     {"mla_absorbed": True}, True),
+    ("deepseek-v3-671b", "decode_32k", "absorbed_ep_int8a2a",
+     {"mla_absorbed": True, "moe": {"dispatch_dtype": "int8"}}, True),
+    # cell B
+    ("deepseek-v3-671b", "train_4k", "int8a2a",
+     {"moe": {"dispatch_dtype": "int8"}}, False),
+    ("deepseek-v3-671b", "train_4k", "int8a2a_devlim",
+     {"moe": {"dispatch_dtype": "int8", "route_groups": 16,
+              "route_device_limit": 4}}, False),
+    # cell C
+    ("qwen2.5-14b", "decode_32k", "int8kv",
+     {"kv_cache_dtype": "int8"}, False),
+]
+
+
+def main() -> None:
+    for arch, shape, name, overrides, ep in VARIANTS:
+        run_cell(arch, shape, multi_pod=False, variant=name,
+                 overrides=dict(overrides), ep_serve=ep)
+
+
+if __name__ == "__main__":
+    main()

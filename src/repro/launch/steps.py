@@ -1,0 +1,178 @@
+"""Step functions (train / prefill / decode) with production shardings.
+
+These are the units the dry-run lowers and the drivers execute.  All
+sharding decisions live in runtime/sharding.py; this module only assembles
+jit-wrapped callables plus ShapeDtypeStruct input trees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig, SHAPES
+from ..models import model as M
+from ..models import transformer
+from ..optim import adamw
+from ..optim.schedule import warmup_cosine
+from ..runtime import sharding as shr
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "step"], meta_fields=[])
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    *, total_steps: int = 10_000, warmup_steps: int = 200):
+    """Pure train step: (state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(state.params, batch, cfg)
+        lr_scale = warmup_cosine(state.step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        params, opt, info = adamw.apply_updates(
+            state.params, grads, state.opt, opt_cfg, lr_scale)
+        metrics.update(info)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         opt_cfg: adamw.AdamWConfig) -> TrainState:
+    """ShapeDtypeStruct train state (no allocation)."""
+    params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw.init_opt_state(params, opt_cfg))
+    return TrainState(params, opt,
+                      jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(mesh: Mesh, state: TrainState) -> TrainState:
+    psh = shr.params_shardings(mesh, state.params)
+    # optimizer moments shard exactly like their params (ZeRO-for-free)
+    osh = {
+        "mu": jax.tree_util.tree_map(
+            lambda s: s, psh),
+        "nu": jax.tree_util.tree_map(lambda s: s, psh),
+        "count": NamedSharding(mesh, P()),
+    }
+    return TrainState(psh, osh, NamedSharding(mesh, P()))
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict) -> dict:
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "cache":
+            out[k] = shr.tree_shardings(mesh, v, shr.cache_pspec)
+        else:
+            out[k] = NamedSharding(mesh, shr.batch_pspec(mesh, v.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, inputs):
+        return M.prefill(params, inputs, cfg, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, length):
+        return M.decode_step(params, token, cache, length, cfg)
+    return decode_step
+
+
+def make_forward(cfg: ModelConfig):
+    def fwd(params, inputs):
+        logits, _ = M.forward(params, inputs, cfg)
+        return logits
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Lowering assembly for one (arch × shape × mesh) cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: InputShape | str, mesh: Mesh,
+               *, opt_cfg: adamw.AdamWConfig | None = None,
+               donate: bool = True, ep_serve: bool = False):
+    """Build and ``.lower()`` the step for one dry-run cell.
+
+    Returns (lowered, meta) where meta records what was lowered.
+    ``ep_serve`` selects the expert-resident serving layout (§Perf).
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    specs = M.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, opt_cfg)
+        st_sh = train_state_shardings(mesh, state)
+        b_sh = batch_shardings(mesh, specs)
+        step = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            donate_argnums=(0,) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(state, specs)
+        return lowered, {"kind": "train", "inputs": specs}
+
+    if shape.kind == "prefill":
+        params = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        pbytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(params))
+        psh = shr.params_shardings_serve(mesh, params, pbytes)
+        inp = specs.get("tokens", specs.get("embeds"))
+        in_sh = NamedSharding(mesh, shr.batch_pspec(mesh, inp.shape))
+        fwd = make_forward(cfg)
+        jitted = jax.jit(fwd, in_shardings=(psh, in_sh))
+        with mesh:
+            lowered = jitted.lower(params, inp)
+        return lowered, {"kind": "prefill", "inputs": specs}
+
+    if shape.kind == "decode":
+        params = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        pbytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(params))
+        psh = shr.params_shardings_serve(mesh, params, pbytes,
+                                         ep_serve=ep_serve)
+        cache = specs["cache"]
+        csh = shr.tree_shardings(mesh, cache, shr.cache_pspec)
+        tok_sh = NamedSharding(mesh,
+                               shr.batch_pspec(mesh, specs["token"].shape))
+        len_sh = NamedSharding(mesh, P())
+        step = make_decode_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(psh, tok_sh, csh, len_sh),
+            donate_argnums=(2,) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(params, specs["token"], cache,
+                                   specs["length"])
+        return lowered, {"kind": "decode", "inputs": specs}
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,9 @@
+"""Model zoo: config-driven dense / MoE / hybrid / SSM decoder LMs."""
+
+from . import attention, layers, model, moe, ssm, transformer
+from .model import (init_params, loss_fn, forward, prefill, decode_step,
+                    init_cache, input_specs)
+
+__all__ = ["attention", "layers", "model", "moe", "ssm", "transformer",
+           "init_params", "loss_fn", "forward", "prefill", "decode_step",
+           "init_cache", "input_specs"]

@@ -1,0 +1,117 @@
+"""Model facade: init / loss / prefill / decode / input_specs per arch.
+
+This is the public modelling API the launcher, dry-run, examples and tests
+use.  Everything is shape-driven: ``input_specs`` produces the
+ShapeDtypeStruct stand-ins for any (config × input-shape) cell, so the
+multi-pod dry-run lowers every cell without allocating a byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, transformer
+from ..configs.base import InputShape, ModelConfig, SHAPES
+
+
+LB_LOSS_WEIGHT = 0.01
+MTP_LOSS_WEIGHT = 0.3
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    params = transformer.init_params(rng, cfg)
+    if cfg.mtp_depth > 0:
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, 7))
+        d = cfg.d_model
+        params["mtp"] = {
+            "proj": layers._dense_init(k1, 2 * d, d, cfg.np_dtype),
+            "layer": transformer._layer_init(
+                k2, cfg.segments[-1].unit[-1], cfg),
+            "norm": layers.rmsnorm_init(d, cfg.np_dtype),
+        }
+    return params
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy in fp32.  logits (..., V), labels (...)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig
+            ) -> tuple[jax.Array, dict]:
+    """Next-token LM loss (+ MoE load-balance + optional MTP)."""
+    if cfg.frontend_stub and "embeds" in batch:
+        inputs = batch["embeds"]
+        labels = batch["labels"]
+    else:
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = transformer.forward(
+        params, inputs, cfg, return_hidden=cfg.mtp_depth > 0)
+    loss = _xent(logits, labels)
+    metrics = {"lm_loss": loss}
+    if cfg.moe is not None:
+        n_moe = max(1, sum(
+            seg.repeats * sum(1 for s in seg.unit if s.mlp == "moe")
+            for seg in cfg.segments))
+        lb = aux["lb_loss"] / n_moe
+        loss = loss + LB_LOSS_WEIGHT * lb
+        metrics["lb_loss"] = lb
+    if cfg.mtp_depth > 0:
+        # DeepSeek-V3 MTP: predict token t+2 from [h_t ; emb(t+1)]
+        h = aux["hidden"][:, :-1]                       # h_t, t < S-1
+        nxt = inputs[:, 1:]                             # token t+1
+        emb_nxt = layers.embedding_apply(params["embed"], nxt)
+        h2 = jnp.concatenate([h, emb_nxt], axis=-1) @ params["mtp"]["proj"]
+        h2 = transformer._layer_apply(
+            params["mtp"]["layer"], h2, cfg.segments[-1].unit[-1], cfg, {})
+        h2 = layers.rmsnorm_apply(params["mtp"]["norm"], h2)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits2 = layers.unembed_apply(emb, h2)
+        mtp_loss = _xent(logits2, labels[:, 1:])
+        loss = loss + MTP_LOSS_WEIGHT * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+forward = transformer.forward
+prefill = transformer.prefill
+decode_step = transformer.decode_step
+init_cache = transformer.init_cache
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str) -> dict:
+    """Inputs for the step function of the given kind — ShapeDtypeStructs
+    only, weak-type-correct, shardable, no device allocation."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.frontend_stub:
+            return {"embeds": sds((B, S, cfg.d_model), cfg.np_dtype),
+                    "labels": sds((B, S), jnp.int32)}
+        return {"tokens": sds((B, S + 1), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.frontend_stub:
+            return {"embeds": sds((B, S, cfg.d_model), cfg.np_dtype)}
+        return {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, B, S))
+        return {"token": sds((B,), jnp.int32),
+                "length": sds((), jnp.int32),
+                "cache": cache}
+    raise ValueError(shape.kind)

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts with top-k routing, shared experts, capacity dispatch.
+
+MoE dispatch is the framework's second canonical "memory operation" in the
+paper's taxonomy: a data-dependent scatter (tokens → expert buffers)
+followed by a gather (expert outputs → token order), with the expert GEMMs
+as the long-latency compute stage in between.  Algorithm 1 therefore cuts
+stages exactly at dispatch and combine — which is how the layer is written:
+scatter → batched expert FFN → gather, so the all-to-all traffic induced by
+expert-parallel sharding (experts on the ``model`` axis) overlaps with the
+expert GEMMs under the XLA scheduler.
+
+Dispatch is sort-free scatter-add with per-expert capacity
+``C = ceil(k·T/E · capacity_factor)``; overflow tokens are dropped (their
+residual passes through — standard Switch behaviour), and the combine
+re-weights by the router probabilities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def moe_init(rng, cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    E = m.num_experts
+    p = {
+        "router": layers._dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (E, d, m.d_ff), jnp.float32)
+                   / np.sqrt(d)).astype(cfg.np_dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, m.d_ff), jnp.float32)
+                 / np.sqrt(d)).astype(cfg.np_dtype),
+        "w_down": (jax.random.normal(ks[3], (E, m.d_ff, d), jnp.float32)
+                   / np.sqrt(m.d_ff)).astype(cfg.np_dtype),
+    }
+    if m.num_shared > 0:
+        p["shared"] = layers.mlp_init(ks[4], d, m.d_ff * m.num_shared,
+                                      cfg.act, cfg.np_dtype)
+    return p
+
+
+def moe_apply(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    """x: (B, S, d) → (y, aux) with load-balance metrics in aux."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    xt = x.reshape(T, d)
+
+    # --- router (fp32 for numerics) ---------------------------------------
+    logits = xt.astype(jnp.float32) @ params["router"]     # (T, E)
+    if m.router_fn == "sigmoid":   # DeepSeek-V3 style
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    if m.route_groups > 1 and m.route_device_limit > 0:
+        # §Perf: device-limited routing (DeepSeek-V3 node-limited routing):
+        # keep only the top-M expert groups per token before the top-k, so
+        # each token's dispatch fans out to ≤ M EP devices.
+        G = m.route_groups
+        gs = scores.reshape(T, G, E // G).max(axis=-1)      # (T, G)
+        _, top_g = jax.lax.top_k(gs, m.route_device_limit)
+        gmask = jax.nn.one_hot(top_g, G, dtype=scores.dtype).sum(1)
+        scores = (scores.reshape(T, G, E // G)
+                  * gmask[..., None]).reshape(T, E)
+    top_w, top_ids = jax.lax.top_k(scores, k)              # (T, k)
+    if m.normalize_weights:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity + position within expert --------------------------------
+    cap = int(np.ceil(k * T / E * m.capacity_factor))
+    onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.int32)   # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                  # pos in expert
+    pos = (pos * flat).sum(-1).reshape(T, k)               # (T, k)
+    keep = pos < cap
+    slot = top_ids * cap + pos                             # (T, k) in [0,E*cap)
+
+    # --- scatter (dispatch: the memory stage) ------------------------------
+    # §Perf knob: int8 dispatch — quantize the token payload before the
+    # scatter (the expert-parallel all-to-all moves the scattered buffer,
+    # so this halves its wire bytes); per-token f16 scales ride along.
+    src = jnp.repeat(xt[:, None, :], k, axis=1)            # (T, k, d)
+    src = jnp.where(keep[..., None], src, 0)
+    if m.dispatch_dtype == "int8":
+        s8 = jnp.max(jnp.abs(src.astype(jnp.float32)), -1,
+                     keepdims=True) / 127.0
+        s8 = jnp.maximum(s8, 1e-8)
+        src_q = jnp.clip(jnp.round(src.astype(jnp.float32) / s8),
+                         -127, 127).astype(jnp.int8)
+        xe_q = jnp.zeros((E * cap, d), jnp.int8)
+        xe_q = xe_q.at[slot.reshape(-1)].add(src_q.reshape(T * k, d))
+        se = jnp.zeros((E * cap, 1), jnp.float16)
+        se = se.at[slot.reshape(-1)].add(
+            s8.reshape(T * k, 1).astype(jnp.float16))
+        xe = (xe_q.astype(jnp.float32)
+              * se.astype(jnp.float32)).astype(x.dtype)
+    else:
+        xe = jnp.zeros((E * cap, d), x.dtype)
+        xe = xe.at[slot.reshape(-1)].add(src.reshape(T * k, d))
+    xe = xe.reshape(E, cap, d)
+
+    # --- expert FFN (the long-latency stage) -------------------------------
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = (jax.nn.silu(gate.astype(jnp.float32))
+         * up.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, cap, d)
+
+    # --- gather (combine: the second memory stage) --------------------------
+    yk = ye.reshape(E * cap, d)[slot.reshape(-1)].reshape(T, k, d)
+    yk = yk * (top_w * keep).astype(jnp.float32)[..., None]
+    y = yk.sum(axis=1).astype(x.dtype)
+
+    # --- shared experts (always-on streaming partition) ---------------------
+    if m.num_shared > 0:
+        y = y + layers.mlp_apply(params["shared"], xt, cfg.act)
+
+    # --- aux: load-balance loss (Switch-style) ------------------------------
+    me = scores.mean(axis=0)                                # (E,)
+    ce = (onehot.sum(axis=1).astype(jnp.float32)).mean(axis=0) * (E / k)
+    aux = {
+        "lb_loss": (me * ce).sum() * E,
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+    return y.reshape(B, S, d), aux

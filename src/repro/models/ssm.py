@@ -1,0 +1,305 @@
+"""State-space sequence mixers: Mamba-1 (Jamba) and RWKV-6 "Finch".
+
+Both recurrences are loop-carried SCCs in the paper's terms: the state
+update ``h_t = f(h_{t-1}, x_t)`` is a dependence cycle that Algorithm 1
+keeps inside one stage — the template cannot pipeline *across* it (the DFS
+negative result, §V-A).  What the template *does* decouple is the traffic
+around the cycle: input projections (streaming loads), the scan itself
+(the SCC stage), and the output projection/gating (downstream compute).
+
+Two scan implementations:
+
+* ``sequential`` — ``lax.scan`` over time with O(B·d_inner·N) state; always
+  correct, memory-minimal; the default and the decode path.
+* ``chunked``    — scan over chunks with an in-chunk parallel prefix
+  (materializes (B, chunk, d_inner, N) only per chunk) — the TPU-friendly
+  training path; chunk size bounds the VMEM/HBM working set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM) — arXiv:2312.00752 as used by Jamba (2403.19887)
+# ---------------------------------------------------------------------------
+
+def mamba_init(rng, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner
+    ks = jax.random.split(rng, 6)
+    A = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                         (d_in, s.d_state))
+    return {
+        "w_in": layers._dense_init(ks[0], d, 2 * d_in, cfg.np_dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32)
+                   * 0.1).astype(cfg.np_dtype),
+        "conv_b": jnp.zeros((d_in,), cfg.np_dtype),
+        "w_x": layers._dense_init(ks[2], d_in,
+                                  s.dt_rank + 2 * s.d_state, cfg.np_dtype),
+        "w_dt": layers._dense_init(ks[3], s.dt_rank, d_in, cfg.np_dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": layers._dense_init(ks[4], d_in, d, cfg.np_dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B, L, d_in); w: (K, d_in) depthwise.  state: (B, K-1, d_in)
+    carries the last K−1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out + b, new_state
+
+
+def _selective_scan_seq(dt, A, Bc, Cc, x):
+    """Sequential scan.  dt,x: (B,L,dI); A: (dI,N); Bc,Cc: (B,L,N)."""
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp                   # (B,dI),(B,N),(B,N),(B,dI)
+        da = jnp.exp(dt_t[..., None] * A)           # (B, dI, N)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = (h * C_t[:, None, :]).sum(-1)           # (B, dI)
+        return h, y
+
+    B, L, dI = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    xs = (dt.transpose(1, 0, 2), Bc.transpose(1, 0, 2),
+          Cc.transpose(1, 0, 2), x.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_final           # (B, L, dI), (B, dI, N)
+
+
+def _selective_scan_chunked(dt, A, Bc, Cc, x, chunk: int = 16):
+    """Chunked scan: sequential over L/chunk, parallel inside the chunk via
+    materialized decay products (the SSD-style formulation)."""
+    B, L, dI = x.shape
+    N = A.shape[1]
+    nc = L // chunk
+    assert L % chunk == 0
+
+    dt_c = dt.reshape(B, nc, chunk, dI)
+    Bc_c = Bc.reshape(B, nc, chunk, N)
+    Cc_c = Cc.reshape(B, nc, chunk, N)
+    x_c = x.reshape(B, nc, chunk, dI)
+
+    def chunk_step(h, inp):
+        dtc, bcc, ccc, xc = inp      # (B,chunk,dI),(B,chunk,N),...
+        # log-decay prefix within the chunk
+        la = dtc[..., None] * A      # (B,chunk,dI,N)
+        cum = jnp.cumsum(la, axis=1)
+        # contribution of the carried state h to each position
+        h_part = jnp.einsum("bcin,bin->bcin", jnp.exp(cum),
+                            h)                        # decayed carry
+        # pairwise within-chunk contributions: token j→i (j<=i)
+        # decay(i,j) = exp(cum_i - cum_j)
+        contrib = (dtc * xc)[..., None] * bcc[:, :, None, :]  # (B,c,dI,N)
+        dec = jnp.exp(cum[:, :, None] - cum[:, None])  # (B,c,c,dI,N)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dec = jnp.where(mask[None, :, :, None, None], dec, 0.0)
+        acc = jnp.einsum("bijdn,bjdn->bidn", dec, contrib)
+        hs = h_part + acc                              # (B,c,dI,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, ccc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0,
+        (dt_c.transpose(1, 0, 2, 3), Bc_c.transpose(1, 0, 2, 3),
+         Cc_c.transpose(1, 0, 2, 3), x_c.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).reshape(B, L, dI), h_final
+
+
+def mamba_apply(params: dict, x: jax.Array, cfg,
+                return_cache: bool = False):
+    s = cfg.ssm
+    B, L, _ = x.shape
+    xz = x @ params["w_in"]
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin, _ = _causal_conv1d(xin_raw, params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin.astype(jnp.float32))
+    proj = (xin.astype(x.dtype) @ params["w_x"]).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state], -1)
+    dt = jax.nn.softplus(dt @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    if s.scan_impl == "chunked" and L % s.chunk == 0 and L > s.chunk:
+        y, h_final = _selective_scan_chunked(dt, A, Bc, Cc, xin,
+                                             chunk=s.chunk)
+    else:
+        y, h_final = _selective_scan_seq(dt, A, Bc, Cc, xin)
+    y = y + params["D"] * xin
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ params["w_out"]
+    if return_cache:
+        K = s.d_conv
+        conv_state = xin_raw[:, -(K - 1):, :].astype(cfg.np_dtype)
+        return out, {"h": h_final, "conv": conv_state}
+    return out
+
+
+def mamba_init_cache(cfg, batch: int) -> dict:
+    s = cfg.ssm
+    return {
+        "h": jnp.zeros((batch, s.d_inner, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, s.d_inner), cfg.np_dtype),
+    }
+
+
+def mamba_decode(params: dict, x: jax.Array, cache: dict,
+                 cfg) -> tuple[jax.Array, dict]:
+    """One-token step.  x: (B, 1, d)."""
+    s = cfg.ssm
+    xz = x @ params["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv1d(xin, params["conv_w"],
+                                     params["conv_b"], cache["conv"])
+    xin = jax.nn.silu(xin.astype(jnp.float32))[:, 0]     # (B, dI)
+    proj = (xin.astype(x.dtype) @ params["w_x"]).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state], -1)
+    dt = jax.nn.softplus(dt @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[..., None] * A)
+    h = da * cache["h"] + (dt * xin)[..., None] * Bc[:, None, :]
+    y = (h * Cc[:, None, :]).sum(-1) + params["D"] * xin
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = (y.astype(x.dtype) @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch" — arXiv:2404.05892 (data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(rng, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.rwkv_heads
+    hd = d // H
+    ks = jax.random.split(rng, 10)
+    lora = cfg.rwkv_decay_lora
+    return {
+        # token-shift mix coefficients (per channel)
+        "mu_r": jnp.full((d,), 0.5, cfg.np_dtype),
+        "mu_k": jnp.full((d,), 0.5, cfg.np_dtype),
+        "mu_v": jnp.full((d,), 0.5, cfg.np_dtype),
+        "mu_w": jnp.full((d,), 0.5, cfg.np_dtype),
+        "mu_g": jnp.full((d,), 0.5, cfg.np_dtype),
+        "w_r": layers._dense_init(ks[0], d, d, cfg.np_dtype),
+        "w_k": layers._dense_init(ks[1], d, d, cfg.np_dtype),
+        "w_v": layers._dense_init(ks[2], d, d, cfg.np_dtype),
+        "w_g": layers._dense_init(ks[3], d, d, cfg.np_dtype),
+        "w_o": layers._dense_init(ks[4], d, d, cfg.np_dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": layers._dense_init(ks[5], d, lora, cfg.np_dtype),
+        "decay_B": layers._dense_init(ks[6], lora, d, cfg.np_dtype),
+        "bonus_u": (jax.random.normal(ks[7], (H, hd), jnp.float32)
+                    * 0.1),
+        "ln_x": layers.layernorm_init(d, cfg.np_dtype),
+    }
+
+
+def _token_shift(x, prev=None):
+    """RWKV token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def rwkv6_apply(params: dict, x: jax.Array, cfg,
+                return_cache: bool = False):
+    B, L, d = x.shape
+    H = cfg.rwkv_heads
+    hd = d // H
+    xs = _token_shift(x)
+    r = _rwkv_mix(x, xs, params["mu_r"]) @ params["w_r"]
+    k = _rwkv_mix(x, xs, params["mu_k"]) @ params["w_k"]
+    v = _rwkv_mix(x, xs, params["mu_v"]) @ params["w_v"]
+    g = _rwkv_mix(x, xs, params["mu_g"]) @ params["w_g"]
+    xw = _rwkv_mix(x, xs, params["mu_w"])
+    w = params["decay_w0"] + (jnp.tanh(
+        (xw @ params["decay_A"]).astype(jnp.float32))
+        @ params["decay_B"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w))                                  # (B, L, d)
+
+    rh = r.reshape(B, L, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, L, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, L, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, L, H, hd)
+    u = params["bonus_u"]                                      # (H, hd)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp        # (B,H,hd) each
+        kv = k_t[..., None] * v_t[..., None, :]        # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_final, ys = jax.lax.scan(
+        step, S0,
+        (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+         vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, d)
+    y = layers.layernorm_apply(params["ln_x"], y.astype(x.dtype))
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["w_o"]
+    if return_cache:
+        return out, {"S": S_final, "x_prev": x[:, -1:, :]}
+    return out
+
+
+def rwkv6_init_cache(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    H = cfg.rwkv_heads
+    hd = d // H
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, 1, d), cfg.np_dtype),
+    }
+
+
+def rwkv6_decode(params: dict, x: jax.Array, cache: dict,
+                 cfg) -> tuple[jax.Array, dict]:
+    B, _, d = x.shape
+    H = cfg.rwkv_heads
+    hd = d // H
+    xs = cache["x_prev"]
+    r = _rwkv_mix(x, xs, params["mu_r"]) @ params["w_r"]
+    k = _rwkv_mix(x, xs, params["mu_k"]) @ params["w_k"]
+    v = _rwkv_mix(x, xs, params["mu_v"]) @ params["w_v"]
+    g = _rwkv_mix(x, xs, params["mu_g"]) @ params["w_g"]
+    xw = _rwkv_mix(x, xs, params["mu_w"])
+    w = params["decay_w0"] + (jnp.tanh(
+        (xw @ params["decay_A"]).astype(jnp.float32))
+        @ params["decay_B"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w)).reshape(B, H, hd)
+    r_t = r.reshape(B, H, hd).astype(jnp.float32)
+    k_t = k.reshape(B, H, hd).astype(jnp.float32)
+    v_t = v.reshape(B, H, hd).astype(jnp.float32)
+    u = params["bonus_u"]
+    kv = k_t[..., None] * v_t[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, cache["S"] + u[..., None] * kv)
+    S = w[..., None] * cache["S"] + kv
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = layers.layernorm_apply(params["ln_x"], y)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return y @ params["w_o"], {"S": S, "x_prev": x}

@@ -1,0 +1,8 @@
+"""Optimizer substrate: sharded AdamW, schedules, gradient compression."""
+
+from .adamw import AdamWConfig, apply_updates, global_norm, init_opt_state
+from .schedule import warmup_cosine
+from . import compress
+
+__all__ = ["AdamWConfig", "apply_updates", "global_norm", "init_opt_state",
+           "warmup_cosine", "compress"]

@@ -1,0 +1,92 @@
+"""Sharded AdamW with gradient clipping and weight-decay masks.
+
+Self-contained (no optax dependency in the image).  Optimizer state is a
+pytree congruent with the params, so the same sharding rules apply —
+ZeRO-style sharding of (m, v) over the ``data`` axis falls out of the
+param sharding tree for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    #: keep m/v (and the update math) in fp32 even for bf16 params
+    state_dtype: Any = jnp.float32
+
+
+def _decay_mask(path: tuple, leaf) -> bool:
+    """No weight decay on norms, biases, 1-D params (standard practice)."""
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    if any(str(n) in ("scale", "bias", "dt_bias", "A_log", "D",
+                      "decay_w0", "bonus_u") for n in names):
+        return False
+    return jnp.ndim(leaf) >= 2
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                  lr_scale: jax.Array | float = 1.0) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, info)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    masks = {id_: _decay_mask(p, l) for id_, (p, l) in enumerate(paths)}
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["mu"])
+    flat_v = jax.tree_util.tree_leaves(state["nu"])
+
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, m, v) in enumerate(zip(flat_p, flat_g, flat_m, flat_v)):
+        g32 = g.astype(cfg.state_dtype) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and masks[i]:
+            update = update + cfg.weight_decay * p.astype(cfg.state_dtype)
+        new_p.append((p.astype(cfg.state_dtype)
+                      - lr * update).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    params_out = jax.tree_util.tree_unflatten(treedef, new_p)
+    state_out = {
+        "mu": jax.tree_util.tree_unflatten(treedef, new_m),
+        "nu": jax.tree_util.tree_unflatten(treedef, new_v),
+        "count": count,
+    }
+    info = {"grad_norm": gnorm, "lr": lr}
+    return params_out, state_out, info

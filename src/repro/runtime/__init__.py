@@ -1,0 +1,5 @@
+"""Distributed runtime: sharding rules + fault tolerance."""
+
+from . import fault_tolerance, sharding
+
+__all__ = ["fault_tolerance", "sharding"]

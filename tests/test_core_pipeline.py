@@ -1,0 +1,247 @@
+"""Tests for channels (pack/unpack, FIFO) and the pipeline executors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CDFG, ChannelSpec, DeviceFIFO, HostFIFO,
+                        SystolicPipeline, decouple, partition_cdfg,
+                        pipeline_apply_emulated, gpipe_bubble_fraction)
+
+
+# ---------------------------------------------------------------------------
+# ChannelSpec: pack/unpack roundtrip across dtypes/shapes (property test)
+# ---------------------------------------------------------------------------
+
+_DTYPES = [jnp.float32, jnp.int32, jnp.uint32, jnp.float16, jnp.bfloat16,
+           jnp.int8, jnp.uint8, jnp.int16]
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from(list(range(len(_DTYPES)))),
+            st.lists(st.integers(min_value=1, max_value=5), min_size=0,
+                     max_size=3),
+        ),
+        min_size=1, max_size=4),
+    st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_channel_roundtrip(leaf_specs, seed):
+    rng = np.random.default_rng(seed)
+    leaves = []
+    for di, shape in leaf_specs:
+        dt = _DTYPES[di]
+        x = rng.integers(0, 100, size=shape)
+        leaves.append(jnp.asarray(x).astype(dt))
+    payload = tuple(leaves)
+    spec = ChannelSpec.from_example(payload)
+    word = spec.pack(payload, pad_to=spec.width + 3)
+    got = spec.unpack(word)
+    for a, b in zip(jax.tree_util.tree_leaves(payload),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_channel_roundtrip_f64_under_x64():
+    payload = (jnp.arange(3, dtype=jnp.float32),
+               jnp.asarray([1, 2], dtype=jnp.int32))
+    spec = ChannelSpec.from_example(payload)
+    got = spec.unpack(spec.pack(payload))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(payload[0]))
+
+
+# ---------------------------------------------------------------------------
+# DeviceFIFO semantics (functional bounded queue)
+# ---------------------------------------------------------------------------
+
+def test_device_fifo_push_pop_order():
+    f = DeviceFIFO(depth=3, width=2)
+    s = f.init()
+    for i in range(3):
+        s = f.push(s, jnp.full((2,), i, jnp.uint32))
+    assert int(s.count) == 3
+    assert not bool(f.can_push(s))
+    # push on full is a no-op
+    s2 = f.push(s, jnp.full((2,), 99, jnp.uint32))
+    assert int(s2.count) == 3
+    outs = []
+    for _ in range(3):
+        w, s = f.pop(s)
+        outs.append(int(w[0]))
+    assert outs == [0, 1, 2]
+    assert not bool(f.can_pop(s))
+    # pop on empty is a no-op returning stale data but count stays 0
+    _, s3 = f.pop(s)
+    assert int(s3.count) == 0
+
+
+def test_device_fifo_wraparound():
+    f = DeviceFIFO(depth=2, width=1)
+    s = f.init()
+    s = f.push(s, jnp.asarray([1], jnp.uint32))
+    s = f.push(s, jnp.asarray([2], jnp.uint32))
+    w, s = f.pop(s)
+    assert int(w[0]) == 1
+    s = f.push(s, jnp.asarray([3], jnp.uint32))
+    w, s = f.pop(s)
+    assert int(w[0]) == 2
+    w, s = f.pop(s)
+    assert int(w[0]) == 3
+
+
+def test_device_fifo_inside_scan():
+    f = DeviceFIFO(depth=4, width=1)
+
+    def step(s, x):
+        s = f.push(s, x[None].astype(jnp.uint32))
+        w, s = f.pop(s)
+        return s, w[0]
+
+    xs = jnp.arange(10, dtype=jnp.uint32)
+    _, ys = jax.lax.scan(step, f.init(), xs)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(xs))
+
+
+# ---------------------------------------------------------------------------
+# HostFIFO (input-pipeline decoupling)
+# ---------------------------------------------------------------------------
+
+def test_host_fifo_streams_everything():
+    src = iter(range(100))
+    out = list(HostFIFO(src, depth=8))
+    assert out == list(range(100))
+
+
+def test_host_fifo_propagates_errors():
+    def bad():
+        yield 1
+        raise RuntimeError("producer died")
+
+    f = HostFIFO(bad(), depth=2)
+    assert next(f) == 1
+    with pytest.raises(RuntimeError, match="producer died"):
+        next(f)
+
+
+# ---------------------------------------------------------------------------
+# SystolicPipeline: stream semantics == per-microbatch direct calls
+# ---------------------------------------------------------------------------
+
+def _mk_pipe(fn, *example, stream_argnums=(1,)):
+    cdfg = CDFG.from_function(fn, *example)
+    part = partition_cdfg(cdfg)
+    prog = decouple(part)
+    return SystolicPipeline(prog, stream_argnums=stream_argnums)
+
+
+def test_systolic_matches_direct():
+    def kernel(x, idx, w):
+        a = x[idx]
+        b = a * w
+        return jnp.tanh(b) + 1.0
+
+    x = jnp.arange(64, dtype=jnp.float32)
+    T = 7
+    idxs = jnp.stack([(jnp.arange(8) * (t + 1)) % 64 for t in range(T)])
+    w = jnp.float32(0.5)
+    pipe = _mk_pipe(kernel, x, idxs[0], w)
+    outs = pipe.run_emulated(x, idxs, w)
+    ref = jnp.stack([kernel(x, idxs[t], w) for t in range(T)])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref),
+                               rtol=1e-6)
+
+
+def test_systolic_multi_stream_args():
+    def kernel(table, idx, scale):
+        return table[idx] * scale
+
+    table = jnp.arange(32, dtype=jnp.float32)
+    T = 4
+    idxs = jnp.stack([jnp.arange(4) + t for t in range(T)])
+    scales = jnp.arange(1., T + 1.)
+    pipe = _mk_pipe(kernel, table, idxs[0], scales[0],
+                    stream_argnums=(1, 2))
+    outs = pipe.run_emulated(table, idxs, scales)
+    ref = jnp.stack([kernel(table, idxs[t], scales[t]) for t in range(T)])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous pipeline (classic PP) — emulated schedule
+# ---------------------------------------------------------------------------
+
+def test_pipeline_apply_emulated_matches_sequential():
+    S, M, D = 4, 6, 8
+    rng = np.random.default_rng(0)
+    params = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32) * 0.1)
+    mbs = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    got = pipeline_apply_emulated(stage_fn, params, mbs, num_stages=S)
+
+    def full(x):
+        for s in range(S):
+            x = stage_fn(params[s], x)
+        return x
+
+    ref = jnp.stack([full(mbs[m]) for m in range(M)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+def test_bubble_fraction():
+    assert gpipe_bubble_fraction(1, 8) == 0.0
+    assert gpipe_bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    # more microbatches -> smaller bubble (the template's throughput story)
+    assert (gpipe_bubble_fraction(4, 64)
+            < gpipe_bubble_fraction(4, 8)
+            < gpipe_bubble_fraction(4, 4))
+
+
+# ---------------------------------------------------------------------------
+# Property: systolic streaming == per-microbatch direct calls, for random
+# programs (random op chains, random stream lengths)
+# ---------------------------------------------------------------------------
+
+@given(
+    st.lists(st.sampled_from(["gather", "mul", "tanh", "add", "exp"]),
+             min_size=1, max_size=6),
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=15, deadline=None)
+def test_systolic_property_random_programs(ops, T, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+
+    def fn(table, idx):
+        v = table[idx].astype(jnp.float32)
+        for op in ops:
+            if op == "gather":
+                j = jnp.clip(jnp.abs(v).astype(jnp.int32) % 32, 0, 31)
+                v = table[j]
+            elif op == "mul":
+                v = v * 1.25
+            elif op == "tanh":
+                v = jnp.tanh(v)
+            elif op == "add":
+                v = v + 0.5
+            elif op == "exp":
+                v = jnp.exp(jnp.clip(v, -4, 4))
+        return v
+
+    idxs = jnp.asarray(rng.integers(0, 32, size=(T, 8)))
+    from repro.core import CDFG, decouple, partition_cdfg
+    cdfg = CDFG.from_function(fn, table, idxs[0])
+    part = partition_cdfg(cdfg)
+    prog = decouple(part)
+    pipe = SystolicPipeline(prog, stream_argnums=(1,))
+    outs = pipe.run_emulated(table, idxs)
+    ref = jnp.stack([fn(table, idxs[t]) for t in range(T)])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)

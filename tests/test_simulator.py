@@ -1,0 +1,133 @@
+"""Tests for the Fig. 2 / Fig. 5 fidelity simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import (
+    CacheConfig, CacheSim, MemAccess, MemoryModel, SimStage,
+    acp, acp_cache, hp, hp_cache,
+    simulate_conventional, simulate_dataflow, simulate_processor,
+)
+
+
+def _seq_trace(n, stride=4, base=0):
+    return np.arange(n) * stride + base
+
+
+def _rand_trace(n, span_bytes, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, span_bytes // 4, size=n) * 4
+
+
+def test_cache_lru_and_hit_rate():
+    c = CacheSim(CacheConfig(size_bytes=1024, line_bytes=32, ways=2))
+    # sequential pass over 2 KB: first touch of each line misses,
+    # subsequent words in the line hit.
+    for a in range(0, 2048, 4):
+        c.access(a)
+    assert c.misses == 2048 // 32
+    assert c.hits == 2048 // 4 - c.misses
+    # second pass over the SAME first 512 bytes (fits) now hits
+    h0 = c.hits
+    for a in range(1024, 2048, 4):
+        c.access(a)
+    assert c.hits > h0
+
+
+def test_dataflow_hides_latency_conventional_does_not():
+    """The paper's central claim (Fig. 2): with a long-latency compute stage
+    downstream, random-access misses are shadowed in the dataflow engine but
+    stall the conventional engine."""
+    n = 4000
+    stages = [
+        SimStage("addr", ii=1, latency=2,
+                 accesses=[MemAccess("idx", _seq_trace(n))]),
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x", _rand_trace(n, 16 << 20))]),
+        SimStage("fma", ii=6, latency=8),   # long-latency fp pipeline
+        SimStage("store", ii=1, latency=2,
+                 accesses=[MemAccess("y", _seq_trace(n), is_store=True)]),
+    ]
+    mem = acp()
+    df = simulate_dataflow(stages, mem, n)
+    cv = simulate_conventional(stages, mem, n)
+    assert df.cycles < cv.cycles, (df.cycles, cv.cycles)
+    speedup = cv.cycles / df.cycles
+    assert speedup > 2.0, f"expected substantial speedup, got {speedup:.2f}"
+    # dataflow throughput should approach the compute II bound (6 cyc/iter)
+    assert df.cycles_per_iter < 2.5 * 6
+
+
+def test_cache_helps_conventional_more_than_dataflow():
+    """Fig. 5: adding the 64KB cache cut conventional runtime by ~45% but
+    dataflow only by ~19% — dataflow already tolerates latency."""
+    n = 4000
+    # reuse-heavy random trace so a cache actually captures something
+    rng = np.random.default_rng(1)
+    hot = rng.integers(0, 48 << 10, size=n) & ~3
+    stages = [
+        SimStage("fetch", ii=1, latency=2, accesses=[MemAccess("x", hot)]),
+        SimStage("fma", ii=6, latency=8),
+    ]
+    cv_nc = simulate_conventional(stages, acp(), n).cycles
+    cv_c = simulate_conventional(stages, acp_cache(64), n).cycles
+    df_nc = simulate_dataflow(stages, acp(), n).cycles
+    df_c = simulate_dataflow(stages, acp_cache(64), n).cycles
+    conv_gain = 1 - cv_c / cv_nc
+    df_gain = 1 - df_c / df_nc
+    assert conv_gain > df_gain, (conv_gain, df_gain)
+
+
+def test_hp_port_hurts_conventional():
+    """Fig. 5: conventional degrades ~40% on the uncached HP port vs ACP."""
+    n = 3000
+    stages = [
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x", _rand_trace(n, 8 << 20))]),
+        SimStage("fma", ii=6, latency=8),
+    ]
+    cv_acp = simulate_conventional(stages, acp(), n).cycles
+    cv_hp = simulate_conventional(stages, hp(), n).cycles
+    assert cv_hp > cv_acp * 1.2
+
+
+def test_mem_in_scc_gives_no_benefit():
+    """The DFS negative result (§V-A): a dependence cycle through memory
+    serializes access latency; dataflow ≈ conventional."""
+    n = 2000
+    trace = _rand_trace(n, 3 << 20, seed=2)
+    # DFS: the adjacency load feeds the stack push — the whole loop body is
+    # one SCC *through memory*, so Algorithm 1 yields a single stage with
+    # the accesses inside the dependence cycle.
+    stages = [
+        SimStage("dfs_scc", ii=3, latency=3, mem_in_scc=True,
+                 accesses=[MemAccess("stk", trace),
+                           MemAccess("adj", _rand_trace(n, 3 << 20, 3))]),
+    ]
+    mem = acp()
+    df = simulate_dataflow(stages, mem, n)
+    cv = simulate_conventional(stages, mem, n)
+    ratio = cv.cycles / df.cycles
+    assert ratio < 1.8, f"DFS-like kernel should not benefit much: {ratio}"
+
+
+def test_backpressure_bounds_runahead():
+    """A bounded FIFO must prevent the producer from running unboundedly
+    ahead of a slow consumer."""
+    n = 1000
+    fast = SimStage("prod", ii=1, latency=1)
+    slow = SimStage("cons", ii=20, latency=4)
+    r = simulate_dataflow([fast, slow], acp(), n, fifo_depth=4)
+    # producer start times can lead consumer's by at most depth iterations
+    # → total time governed by the slow stage, not hidden
+    assert r.cycles >= 20 * (n - 1)
+
+
+def test_processor_baseline_reasonable():
+    n = 4000
+    accesses = [MemAccess("x", _rand_trace(n, 16 << 20))]
+    r = simulate_processor(instrs_per_iter=12, accesses=accesses, n_iters=n)
+    assert r.cycles > 0
+    assert r.freq_mhz == 667.0
+    # scaled runtime extrapolation is monotone in iterations
+    assert r.scaled_runtime(10 * n) > r.scaled_runtime(n)
