@@ -1,0 +1,40 @@
+"""Resumable dry-run matrix driver: runs every (arch × shape × mesh) cell,
+skipping cells whose artifact already exists in the output directory.
+
+Run:  PYTHONPATH=src python benchmarks/dryrun_matrix.py [--out DIR]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args()
+
+    from repro.configs.base import ARCH_IDS, SHAPES
+    from repro.launch.dryrun import run_cell
+
+    n_done = n_run = 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for multi_pod in (False, True):
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                cell = f"{arch}__{shape}__{mesh_name}"
+                path = os.path.join(args.out, f"{cell}.json")
+                if os.path.exists(path):
+                    n_done += 1
+                    continue
+                run_cell(arch, shape, multi_pod=multi_pod,
+                         out_dir=args.out)
+                n_run += 1
+    print(f"matrix complete: {n_run} ran, {n_done} already present")
+
+
+if __name__ == "__main__":
+    main()

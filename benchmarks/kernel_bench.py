@@ -86,9 +86,33 @@ def bench_spmv() -> list[tuple]:
              f"AI={flops / bytes_:.2f}flop/B(mem-bound)")]
 
 
+def bench_dataflow_driver() -> list[tuple]:
+    """Backend overhead of the compiler driver on the quickstart kernel:
+    ``xla`` is the fused baseline, ``sequential`` replays N staged XLA
+    calls (per-stage dispatch overhead), ``emulated`` adds the tick-exact
+    schedule.  The derived column reports the compiled pipeline shape."""
+    from repro.dataflow import compile as dataflow_compile
+
+    def kernel(table, idx, w):
+        return jnp.tanh(table[idx] * w) + 1.0
+
+    table = jnp.arange(4096, dtype=jnp.float32)
+    idx = jnp.arange(0, 4096, 16, dtype=jnp.int32)
+    w = jnp.float32(1.5)
+    compiled = dataflow_compile(kernel, table, idx, w, stream_argnums=(1,))
+    shape = (f"stages={compiled.num_stages};"
+             f"chans={compiled.schedule.num_channels}")
+    rows = []
+    for backend in ("xla", "sequential", "emulated"):
+        us = _time(lambda t, i, w: compiled(t, i, w, backend=backend),
+                   table, idx, w)
+        rows.append((f"dataflow_{backend}", us, shape))
+    return rows
+
+
 def all_rows() -> list[tuple]:
     return (bench_matmul() + bench_attention() + bench_decode()
-            + bench_spmv())
+            + bench_spmv() + bench_dataflow_driver())
 
 
 def main() -> None:

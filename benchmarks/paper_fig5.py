@@ -22,54 +22,28 @@ from __future__ import annotations
 import dataclasses
 import json
 
-import networkx as nx
 import numpy as np
 
-from repro.core import CDFG, partition_cdfg
 from repro.core.simulator import (MemoryModel, SimStage, acp, acp_cache, hp,
                                   hp_cache, simulate_conventional,
                                   simulate_dataflow, simulate_processor)
+from repro.dataflow import compile as dataflow_compile, fused_stage
 from .paper_kernels import ALL_KERNELS, PaperKernel
 
 
 def build_stages(k: PaperKernel) -> tuple[list[SimStage], list[SimStage]]:
-    """(dataflow stages, conventional stage) from the real partitioner."""
-    cdfg = CDFG.from_loop_body(
+    """(dataflow stages, conventional stage) from the compiler driver.
+
+    The driver traces the loop body in loop mode (carry back-edges),
+    partitions with Algorithm 1, and classifies memory-in-SCC stages (the
+    DFS pathology); traces are attached positionally to memory ops in
+    pipeline-stage order."""
+    compiled = dataflow_compile(
         k.loop_body, k.carry_example, *k.body_args,
+        loop=True,
         nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
-    part = partition_cdfg(cdfg)
-
-    # which memory nodes sit inside a dependence cycle? (DFS pathology)
-    g = nx.DiGraph()
-    g.add_nodes_from(n.id for n in cdfg.nodes)
-    g.add_edges_from((e.src, e.dst) for e in cdfg.edges)
-    cyclic_nodes = set()
-    for comp in nx.strongly_connected_components(g):
-        if len(comp) > 1 or any(g.has_edge(n, n) for n in comp):
-            cyclic_nodes |= comp
-
-    trace_list = list(k.traces.values())
-    ti = 0
-    df_stages: list[SimStage] = []
-    for s in part.stages:
-        mem_nodes = [n for n in s.node_ids if cdfg.node(n).is_memory]
-        accesses = []
-        for _ in mem_nodes:
-            if ti < len(trace_list):
-                accesses.append(trace_list[ti])
-                ti += 1
-        mem_in_scc = any(n in cyclic_nodes for n in mem_nodes)
-        df_stages.append(SimStage(
-            name=f"s{s.id}", ii=s.ii, latency=max(1, s.latency),
-            accesses=accesses, mem_in_scc=mem_in_scc))
-
-    conv = [SimStage(
-        name="fused",
-        ii=max(st.ii for st in df_stages),
-        latency=sum(st.latency for st in df_stages),
-        accesses=[a for st in df_stages for a in st.accesses],
-        mem_in_scc=any(st.mem_in_scc for st in df_stages))]
-    return df_stages, conv
+    df_stages = compiled.sim_stages(traces=list(k.traces.values()))
+    return df_stages, [fused_stage(df_stages)]
 
 
 def run_kernel(k: PaperKernel) -> dict:

@@ -2,74 +2,76 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-1. Write an ordinary JAX function with an irregular memory access.
-2. Trace it into a CDFG; watch Algorithm 1 cut stages at the memory op and
-   at the long-latency multiply (the paper's Fig. 1).
-3. Execute the decoupled program — semantically identical to the original.
-4. Stream microbatches through the systolic pipeline executor.
-5. Simulate the paper's Fig. 2 schedule to see WHY decoupling wins.
+1. Decorate an ordinary JAX function with ``dataflow_jit`` — the compiler
+   driver traces it into a CDFG, runs Algorithm 1 partitioning, decouples
+   access from execute, and schedules the stage pipeline.
+2. Inspect the pass pipeline's product with ``.report()``.
+3. Execute through every registered backend — ``sequential`` (stage replay),
+   ``emulated`` (tick-exact systolic schedule), ``systolic`` (one stage per
+   device via shard_map), ``xla`` (the fused baseline) — all bit-compatible
+   with the direct call.
+4. Stream microbatches through the pipeline (the paper's Fig. 2 schedule).
+5. Simulate the Zynq-like memory system to see WHY decoupling wins (Fig. 5).
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import os
 
-from repro.core import (CDFG, SystolicPipeline, decouple, partition_cdfg,
-                        run_stages_sequential)
-from repro.core.simulator import (MemAccess, SimStage, acp,
-                                  simulate_conventional, simulate_dataflow)
+# one host device per pipeline stage for the systolic backend (must be set
+# before jax initializes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.dataflow import dataflow_jit, execute_backends  # noqa: E402
+
+
+# -- 1. a kernel with the paper's pathology: a data-dependent gather
+#       feeding long-latency floating-point compute
+@dataflow_jit(stream_argnums=(1,))
+def kernel(table, idx, w):
+    g = table[idx]             # irregular load (cache-miss prone)
+    h = g * w                  # long-latency fp multiply
+    return jnp.tanh(h) + 1.0   # more long-latency compute
 
 
 def main() -> None:
-    # -- 1. a kernel with the paper's pathology: a data-dependent gather
-    #       feeding long-latency floating-point compute
-    def kernel(table, idx, w):
-        g = table[idx]             # irregular load (cache-miss prone)
-        h = g * w                  # long-latency fp multiply
-        return jnp.tanh(h) + 1.0   # more long-latency compute
-
     table = jnp.arange(1024, dtype=jnp.float32)
     idx = jnp.asarray([3, 997, 41, 512, 7, 800, 64, 2])
     w = jnp.float32(1.5)
 
-    # -- 2. CDFG → Algorithm 1
-    cdfg = CDFG.from_function(kernel, table, idx, w)
-    print(cdfg.summary(), "\n")
-    part = partition_cdfg(cdfg)
-    print(part.summary(), "\n")
+    # -- 2. the compiled artifact: CDFG -> Algorithm 1 -> stages -> schedule
+    compiled = kernel.lower(table, idx, w)
+    print(compiled.cdfg.summary(), "\n")
+    print(compiled.report(), "\n")
 
-    # -- 3. decoupled execution == direct execution
-    prog = decouple(part)
-    out = run_stages_sequential(prog, table, idx, w)
-    np.testing.assert_array_equal(np.asarray(out[0]),
-                                  np.asarray(kernel(table, idx, w)))
-    print("decoupled == direct: OK\n")
+    # -- 3. every execution backend == the direct (untransformed) call
+    ref = np.asarray(kernel.__wrapped__(table, idx, w))
+    for name in execute_backends():
+        if name not in compiled.backends():
+            print(f"backend {name:<10}: unavailable "
+                  f"({len(jax.devices())} devices)")
+            continue
+        got = np.asarray(kernel(table, idx, w, backend=name))
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+        print(f"backend {name:<10}: OK (== direct call)")
+    print()
 
     # -- 4. stream microbatches through the systolic pipeline
     T = 6
     idx_stream = jnp.stack([(idx + t) % 1024 for t in range(T)])
-    pipe = SystolicPipeline(prog, stream_argnums=(1,))
-    outs = pipe.run_emulated(table, idx_stream, w)
-    ref = jnp.stack([kernel(table, idx_stream[t], w) for t in range(T)])
-    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref),
-                               rtol=1e-6)
-    print(f"systolic pipeline ({pipe.num_stages} stages, "
+    outs = compiled.stream(table, idx_stream, w)
+    ref_stream = np.stack(
+        [np.asarray(kernel.__wrapped__(table, idx_stream[t], w))
+         for t in range(T)])
+    np.testing.assert_allclose(np.asarray(outs), ref_stream, rtol=1e-6)
+    print(f"systolic stream ({compiled.num_stages} stages, "
           f"{T} microbatches): OK\n")
 
-    # -- 5. why it wins: Fig. 2 in numbers
-    n = 3000
-    rng = np.random.default_rng(0)
-    stages = [
-        SimStage("fetch", ii=1, latency=2,
-                 accesses=[MemAccess("x", rng.integers(0, 4 << 20, n) * 4)]),
-        SimStage("fma", ii=6, latency=8),
-    ]
-    df = simulate_dataflow(stages, acp(), n)
-    cv = simulate_conventional(stages, acp(), n)
-    print(f"simulated {n} iterations on the Zynq-like memory model:")
-    print(f"  conventional (fused) : {cv.cycles_per_iter:6.1f} cycles/iter")
-    print(f"  dataflow  (decoupled): {df.cycles_per_iter:6.1f} cycles/iter")
-    print(f"  speedup              : {cv.cycles / df.cycles:6.2f}x")
+    # -- 5. why it wins: the Fig. 2/5 schedule report
+    report = compiled.simulate(n_iters=3000, microbatches=6)
+    print(report.summary())
 
 
 if __name__ == "__main__":

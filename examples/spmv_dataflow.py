@@ -13,9 +13,8 @@ Run:  PYTHONPATH=src python examples/spmv_dataflow.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CDFG, partition_cdfg
-from repro.core.simulator import (MemAccess, acp, simulate_conventional,
-                                  simulate_dataflow)
+from repro.dataflow import compile as dataflow_compile
+from repro.core.simulator import MemAccess, acp
 from repro.kernels import csr_to_bsr, spmv
 
 
@@ -36,32 +35,22 @@ def main() -> None:
         v = vals[j]
         return acc + v * x[c]
 
-    cdfg = CDFG.from_loop_body(inner_loop, jnp.float32(0), jnp.int32(0))
-    part = partition_cdfg(cdfg)
-    print(part.summary())
+    # the driver in loop mode: carry back-edges recreate the cyclic CDFG,
+    # Algorithm 1 builds index fetch -> value fetch -> x gather -> FMA
+    compiled = dataflow_compile(inner_loop, jnp.float32(0), jnp.int32(0),
+                                loop=True)
+    print(compiled.report())
 
     n = min(len(vals_np), 20_000)
     traces = [MemAccess("cols", np.arange(n) * 4),
               MemAccess("vals", np.arange(n) * 4 + (1 << 24)),
               MemAccess("x", cols_np[:n].astype(np.int64) * 4 + (1 << 25))]
-    from repro.core.simulator import SimStage
-    df_stages, ti = [], 0
-    for s in part.stages:
-        n_mem = sum(1 for nid in s.node_ids
-                    if part.cdfg.node(nid).is_memory)
-        accs = traces[ti:ti + n_mem]
-        ti += n_mem
-        df_stages.append(SimStage(f"s{s.id}", ii=s.ii,
-                                  latency=max(1, s.latency),
-                                  accesses=accs))
-    conv = [SimStage("fused", ii=max(s.ii for s in df_stages),
-                     latency=sum(s.latency for s in df_stages),
-                     accesses=[a for s in df_stages for a in s.accesses])]
-    df = simulate_dataflow(df_stages, acp(), n, fifo_depth=32)
-    cv = simulate_conventional(conv, acp(), n)
+    report = compiled.simulate(n_iters=n, traces=traces, mem=acp(),
+                               fifo_depth=32)
+    df, cv = report.dataflow, report.conventional
     print(f"\nZynq model, {n} nnz: conventional {cv.cycles_per_iter:.1f} "
           f"cyc/nnz vs dataflow {df.cycles_per_iter:.1f} cyc/nnz "
-          f"→ {cv.cycles / df.cycles:.1f}x\n")
+          f"→ {report.speedup:.1f}x\n")
 
     # ---- 2. TPU view -------------------------------------------------------
     indptr = np.zeros(dim + 1, np.int64)

@@ -4,6 +4,8 @@ as a production JAX/TPU training & serving framework.
 Subpackages:
   core       — CDFG partitioner (Algorithm 1), channels, pipeline executors,
                fidelity simulator
+  dataflow   — the compiler driver: dataflow_jit / compile, the pass
+               pipeline, and the execution-backend registry (docs/api.md)
   kernels    — Pallas TPU kernels (decoupled access/execute) + oracles
   models     — config-driven LM zoo (dense / MoE / hybrid / SSM)
   configs    — the 10 assigned architectures (exact public configs)

@@ -4,22 +4,29 @@ Pipeline:  trace (CDFG) → partition (Algorithm 1) → decouple (stage
 programs) → execute (systolic / pipeline-parallel) or simulate (Fig. 2/5).
 """
 
-from .cdfg import CDFG, LatencyModel, MEMORY_PRIMITIVES, DEFAULT_LATENCY
-from .partition import Partition, Stage, Channel, partition_cdfg
+from .cdfg import (CDFG, LatencyModel, MEMORY_PRIMITIVES, DEFAULT_LATENCY,
+                   add_memory_order_edges, annotate_memory_regions)
+from .partition import (Partition, Stage, StagePlan, Channel, partition_cdfg,
+                        stage_groups, merge_costly_boundaries, materialize,
+                        duplicate_cheap_rewrite, derive_channels)
 from .decouple import (DecoupledProgram, decouple, decoupled_call,
                        run_stages_sequential)
 from .channels import ChannelSpec, DeviceFIFO, FIFOState, HostFIFO
 from .pipeline import (SystolicPipeline, pipeline_apply,
-                       pipeline_apply_emulated, gpipe_bubble_fraction)
+                       pipeline_apply_emulated, gpipe_bubble_fraction,
+                       shard_map_compat)
 from . import simulator
 
 __all__ = [
     "CDFG", "LatencyModel", "MEMORY_PRIMITIVES", "DEFAULT_LATENCY",
-    "Partition", "Stage", "Channel", "partition_cdfg",
+    "add_memory_order_edges", "annotate_memory_regions",
+    "Partition", "Stage", "StagePlan", "Channel", "partition_cdfg",
+    "stage_groups", "merge_costly_boundaries", "materialize",
+    "duplicate_cheap_rewrite", "derive_channels",
     "DecoupledProgram", "decouple", "decoupled_call",
     "run_stages_sequential",
     "ChannelSpec", "DeviceFIFO", "FIFOState", "HostFIFO",
     "SystolicPipeline", "pipeline_apply", "pipeline_apply_emulated",
-    "gpipe_bubble_fraction",
+    "gpipe_bubble_fraction", "shard_map_compat",
     "simulator",
 ]

@@ -207,12 +207,19 @@ class CDFG:
         latency_model: LatencyModel | None = None,
         regions: Mapping[int, str] | None = None,
         add_memory_edges: bool = True,
+        annotate_regions: bool = True,
         carry_pairs: Sequence[tuple[int, int]] = (),
     ) -> "CDFG":
         """Build the CDFG.  ``carry_pairs`` is a list of
         ``(outvar_index, invar_index)`` pairs: a back-edge is added from the
         producer of ``outvars[o]`` to every consumer of ``invars[i]``,
-        recreating loop-carried dependence cycles (the §III loop view)."""
+        recreating loop-carried dependence cycles (the §III loop view).
+
+        ``annotate_regions=False`` defers the memory-dependence analysis
+        (region discovery + ordering edges) so it can run as a separate
+        compiler pass — see :func:`annotate_memory_regions` and
+        :func:`add_memory_order_edges`.
+        """
         lm = latency_model or LatencyModel()
         jaxpr = closed_jaxpr.jaxpr
 
@@ -242,73 +249,13 @@ class CDFG:
                 if iv in producer:
                     edges.append(Edge(producer[iv], i, iv, "data"))
 
-        # region discovery: walk each memory op's buffer operand back through
-        # layout ops to a jaxpr invar (or a closed-over constvar).
-        invar_index = {v: k for k, v in enumerate(jaxpr.invars)}
-        constvar_index = {v: k for k, v in enumerate(jaxpr.constvars)}
-        region_of_invar: dict[int, str] = dict(regions or {})
+        cdfg = cls(closed_jaxpr, nodes, edges, jaxpr.invars, jaxpr.outvars,
+                   dict(regions or {}))
 
-        def root_invar(var: Any) -> int | None:
-            seen = 0
-            while True:
-                if var in invar_index:
-                    return invar_index[var]
-                if var in constvar_index:
-                    return -1 - constvar_index[var]  # consts: negative ids
-                pid = producer.get(var)
-                if pid is None:
-                    return None
-                peqn = nodes[pid].eqn
-                if peqn.primitive.name in _TRANSPARENT and peqn.invars:
-                    nxt = peqn.invars[0]
-                    if isinstance(nxt, jex_core.Literal):
-                        return None
-                    var = nxt
-                    seen += 1
-                    if seen > 100:
-                        return None
-                else:
-                    return None
-
-        for node in nodes:
-            if not node.is_memory or not node.eqn.invars:
-                continue
-            op0 = node.eqn.invars[0]
-            if isinstance(op0, jex_core.Literal):
-                continue
-            ridx = root_invar(op0)
-            if ridx is not None:
-                default = (f"arg{ridx}" if ridx >= 0
-                           else f"const{-1 - ridx}")
-                name = region_of_invar.get(ridx, default)
-                region_of_invar.setdefault(ridx, name)
-                node.region = name
-            else:
-                node.region = "_anon"
-
-        # §III-A: explicit ordering edges between memory ops of one region.
-        # Loads commute; stores serialize against everything in the region.
+        if annotate_regions or add_memory_edges:
+            annotate_memory_regions(cdfg, regions, producer=producer)
         if add_memory_edges:
-            by_region: dict[str, list[Node]] = {}
-            for n in nodes:
-                if n.is_memory and n.region is not None:
-                    by_region.setdefault(n.region, []).append(n)
-            for reg_nodes in by_region.values():
-                reg_nodes.sort(key=lambda n: n.id)
-                last_store: Node | None = None
-                loads_since_store: list[Node] = []
-                for n in reg_nodes:
-                    if n.is_store:
-                        if last_store is not None:
-                            edges.append(Edge(last_store.id, n.id, None, "mem"))
-                        for ld in loads_since_store:
-                            edges.append(Edge(ld.id, n.id, None, "mem"))
-                        last_store = n
-                        loads_since_store = []
-                    else:
-                        if last_store is not None:
-                            edges.append(Edge(last_store.id, n.id, None, "mem"))
-                        loads_since_store.append(n)
+            add_memory_order_edges(cdfg)
 
         # loop-carried back-edges (the §III faithful view)
         for out_idx, in_idx in carry_pairs:
@@ -320,10 +267,9 @@ class CDFG:
             for j, eqn in enumerate(jaxpr.eqns):
                 if any((not isinstance(x, jex_core.Literal)) and x is iv
                        for x in eqn.invars):
-                    edges.append(Edge(src, j, None, "carry"))
+                    cdfg.edges.append(Edge(src, j, None, "carry"))
 
-        return cls(closed_jaxpr, nodes, edges, jaxpr.invars, jaxpr.outvars,
-                   region_of_invar)
+        return cdfg
 
     @classmethod
     def from_loop_body(
@@ -395,3 +341,101 @@ class CDFG:
             lines.append(f"  n{n.id:<3} {n.prim:<24} lat={n.latency}"
                          f" {tag}{reg}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Memory-dependence analysis (§III-A) — standalone so the compiler driver
+# can schedule it as a named pass (repro.dataflow.passes.MemoryDepPass).
+# ---------------------------------------------------------------------------
+
+
+def producer_map(cdfg: CDFG) -> dict[Any, int]:
+    """var -> id of the node that defines it."""
+    return {ov: n.id for n in cdfg.nodes for ov in n.eqn.outvars}
+
+
+def annotate_memory_regions(
+    cdfg: CDFG, regions: Mapping[int, str] | None = None,
+    *, producer: Mapping[Any, int] | None = None,
+) -> dict[int, str]:
+    """Region discovery: walk each memory op's buffer operand back through
+    layout ops to a jaxpr invar (or a closed-over constvar) and record the
+    region on the node.  ``regions`` overrides names per invar index — the
+    paper's user-guided alias annotation.  ``producer`` accepts a
+    precomputed :func:`producer_map` to avoid rebuilding it."""
+    jaxpr = cdfg.closed_jaxpr.jaxpr
+    if producer is None:
+        producer = producer_map(cdfg)
+    invar_index = {v: k for k, v in enumerate(jaxpr.invars)}
+    constvar_index = {v: k for k, v in enumerate(jaxpr.constvars)}
+    region_of_invar = cdfg.region_of_invar
+    if regions:
+        region_of_invar.update(regions)
+
+    def root_invar(var: Any) -> int | None:
+        seen = 0
+        while True:
+            if var in invar_index:
+                return invar_index[var]
+            if var in constvar_index:
+                return -1 - constvar_index[var]  # consts: negative ids
+            pid = producer.get(var)
+            if pid is None:
+                return None
+            peqn = cdfg.nodes[pid].eqn
+            if peqn.primitive.name in _TRANSPARENT and peqn.invars:
+                nxt = peqn.invars[0]
+                if isinstance(nxt, jex_core.Literal):
+                    return None
+                var = nxt
+                seen += 1
+                if seen > 100:
+                    return None
+            else:
+                return None
+
+    for node in cdfg.nodes:
+        if not node.is_memory or not node.eqn.invars:
+            continue
+        op0 = node.eqn.invars[0]
+        if isinstance(op0, jex_core.Literal):
+            continue
+        ridx = root_invar(op0)
+        if ridx is not None:
+            default = (f"arg{ridx}" if ridx >= 0
+                       else f"const{-1 - ridx}")
+            name = region_of_invar.get(ridx, default)
+            region_of_invar.setdefault(ridx, name)
+            node.region = name
+        else:
+            node.region = "_anon"
+    return region_of_invar
+
+
+def add_memory_order_edges(cdfg: CDFG) -> list[Edge]:
+    """§III-A: explicit ordering edges between memory ops of one region.
+    Loads commute; stores serialize against everything in the region.
+    Appends the new edges to ``cdfg.edges`` and returns them."""
+    added: list[Edge] = []
+    by_region: dict[str, list[Node]] = {}
+    for n in cdfg.nodes:
+        if n.is_memory and n.region is not None:
+            by_region.setdefault(n.region, []).append(n)
+    for reg_nodes in by_region.values():
+        reg_nodes.sort(key=lambda n: n.id)
+        last_store: Node | None = None
+        loads_since_store: list[Node] = []
+        for n in reg_nodes:
+            if n.is_store:
+                if last_store is not None:
+                    added.append(Edge(last_store.id, n.id, None, "mem"))
+                for ld in loads_since_store:
+                    added.append(Edge(ld.id, n.id, None, "mem"))
+                last_store = n
+                loads_since_store = []
+            else:
+                if last_store is not None:
+                    added.append(Edge(last_store.id, n.id, None, "mem"))
+                loads_since_store.append(n)
+    cdfg.edges.extend(added)
+    return added

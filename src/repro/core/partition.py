@@ -135,24 +135,30 @@ def _scc_cycle_latency(cdfg: CDFG, scc: set[int]) -> int:
     return sum(cdfg.node(n).latency for n in scc)
 
 
-def partition_cdfg(
+@dataclasses.dataclass
+class StagePlan:
+    """Intermediate result of Algorithm 1 before materialization: the SCC
+    decomposition plus the grouping of SCCs into stages.  Produced by
+    :func:`stage_groups`, optionally refined by
+    :func:`merge_costly_boundaries`, turned into a :class:`Partition` by
+    :func:`materialize`.  Exposed so the compiler driver
+    (``repro.dataflow``) can run each step as a named, swappable pass."""
+
+    sccs: list[set[int]]
+    scc_of_node: dict[int, int]
+    order: list[int]
+    mem_long: set[int]
+    groups: list[list[int]]
+
+
+def stage_groups(
     cdfg: CDFG,
     *,
     policy: str = "paper",
-    latency_model: LatencyModel | None = None,
-    duplicate_cheap: bool = True,
-    channel_cost_bytes: int = 4096,
-) -> Partition:
-    """Map a CDFG to the dataflow architectural template.
-
-    policy:
-      "paper"      — Algorithm 1 verbatim.
-      "fused"      — single stage (the conventional accelerator).
-      "maximal"    — one node per stage (fine-grained dataflow machine).
-      "cost_aware" — Algorithm 1 + channel-cost driven stage merging.
-    """
-    lm = latency_model or LatencyModel()
-
+) -> StagePlan:
+    """Algorithm 1 lines 2-10: SCCs, condensation, topological order,
+    classification, and the stage grouping for the chosen policy (without
+    the cost-aware merge — that is a separate rewrite)."""
     g = nx.DiGraph()
     for n in cdfg.nodes:
         g.add_node(n.id)
@@ -202,18 +208,31 @@ def partition_cdfg(
         if cur:  # trailing stage (pseudocode omission, see module docstring)
             groups.append(cur)
 
-    if policy == "cost_aware" and len(groups) > 1:
-        groups = _merge_costly_boundaries(
-            cdfg, sccs, groups, channel_cost_bytes)
+    return StagePlan(sccs, scc_of_node, order, mem_long, groups)
 
-    # --- materialize stages ---------------------------------------------------
+
+def merge_costly_boundaries(
+    cdfg: CDFG,
+    plan: StagePlan,
+    channel_cost_bytes: int,
+) -> StagePlan:
+    """Cost-aware rewrite on a :class:`StagePlan` (see
+    :func:`_merge_costly_boundaries` for the merge rule)."""
+    groups = _merge_costly_boundaries(
+        cdfg, plan.sccs, [list(g) for g in plan.groups], channel_cost_bytes)
+    return dataclasses.replace(plan, groups=groups)
+
+
+def materialize(cdfg: CDFG, plan: StagePlan) -> Partition:
+    """Turn a :class:`StagePlan` into a :class:`Partition` with concrete
+    :class:`Stage` records and FIFO channels (no duplication rewrite)."""
     stages: list[Stage] = []
     stage_of_node: dict[int, int] = {}
-    for sid, grp in enumerate(groups):
-        node_ids = sorted(n for k in grp for n in sccs[k])
+    for sid, grp in enumerate(plan.groups):
+        node_ids = sorted(n for k in grp for n in plan.sccs[k])
         for nid in node_ids:
             stage_of_node[nid] = sid
-        ii = max([1] + [_scc_cycle_latency(cdfg, sccs[k]) for k in grp])
+        ii = max([1] + [_scc_cycle_latency(cdfg, plan.sccs[k]) for k in grp])
         regions = tuple(sorted({cdfg.node(n).region for n in node_ids
                                 if cdfg.node(n).region}))
         stages.append(Stage(
@@ -225,14 +244,50 @@ def partition_cdfg(
             ii=ii,
             regions=regions,
         ))
-
     part = Partition(cdfg, stages, [], stage_of_node)
+    part.channels = derive_channels(part)
+    return part
+
+
+def duplicate_cheap_rewrite(part: Partition) -> Partition:
+    """§III-B1 rewrite: replicate cheap producers into consumer stages and
+    re-derive the channel set.  Mutates ``part`` in place and returns it."""
+    _duplicate_cheap_sccs(part)
+    part.channels = derive_channels(part)
+    return part
+
+
+def partition_cdfg(
+    cdfg: CDFG,
+    *,
+    policy: str = "paper",
+    latency_model: LatencyModel | None = None,
+    duplicate_cheap: bool = True,
+    channel_cost_bytes: int = 4096,
+) -> Partition:
+    """Map a CDFG to the dataflow architectural template.
+
+    policy:
+      "paper"      — Algorithm 1 verbatim.
+      "fused"      — single stage (the conventional accelerator).
+      "maximal"    — one node per stage (fine-grained dataflow machine).
+      "cost_aware" — Algorithm 1 + channel-cost driven stage merging.
+
+    Orchestrates :func:`stage_groups` → :func:`merge_costly_boundaries` →
+    :func:`materialize` → :func:`duplicate_cheap_rewrite`; the compiler
+    driver (``repro.dataflow``) runs the same steps as named passes.
+    ``latency_model`` is accepted for API compatibility; latencies are
+    fixed at CDFG construction.
+    """
+    del latency_model
+    plan = stage_groups(cdfg, policy=policy)
+    if policy == "cost_aware" and len(plan.groups) > 1:
+        plan = merge_costly_boundaries(cdfg, plan, channel_cost_bytes)
+    part = materialize(cdfg, plan)
 
     # --- §III-B1: duplicate cheap SCCs instead of cutting a channel ----------
     if duplicate_cheap and policy not in ("fused",):
-        _duplicate_cheap_sccs(part, sccs, scc_of_node)
-
-    part.channels = _derive_channels(part)
+        duplicate_cheap_rewrite(part)
     return part
 
 
@@ -274,11 +329,7 @@ def _merge_costly_boundaries(
     return groups
 
 
-def _duplicate_cheap_sccs(
-    part: Partition,
-    sccs: list[set[int]],
-    scc_of_node: dict[int, int],
-) -> None:
+def _duplicate_cheap_sccs(part: Partition) -> None:
     """§III-B1: frequently-occurring cheap SCCs (loop counters and other
     single-cycle integer ops) are replicated into consumer stages rather than
     paying for a FIFO.  Long-latency ops and memory accesses are never
@@ -308,7 +359,7 @@ def _duplicate_cheap_sccs(
         part.duplicated[node.id] = consumer_stages
 
 
-def _derive_channels(part: Partition) -> list[Channel]:
+def derive_channels(part: Partition) -> list[Channel]:
     """Every dependence edge crossing a stage boundary becomes a FIFO channel
     (§III-A last ¶): one channel per (var, src, dst) triple; memory-order
     edges become zero-width token channels."""

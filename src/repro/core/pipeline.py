@@ -36,12 +36,39 @@ from .channels import ChannelSpec
 from .decouple import DecoupledProgram
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map exists from ~0.6; older releases ship it in
+    jax.experimental with check_rep instead of check_vma."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+_shard_map = shard_map_compat
+
+
 # ---------------------------------------------------------------------------
 # Heterogeneous systolic executor over a DecoupledProgram
 # ---------------------------------------------------------------------------
 
 def _example_for_var(v: Any) -> jax.Array:
-    return jnp.zeros(v.aval.shape, v.aval.dtype)
+    """Zero example matching the runtime value of a boundary var.
+
+    Must agree exactly with what :class:`ChannelSpec` will see at run time:
+    zero-rank avals keep their ``()`` shape, and the dtype is canonicalized
+    (e.g. f64 → f32 under disabled x64) so the packed word width of the
+    boundary spec matches the packed width of the live payload.
+    """
+    aval = getattr(v, "aval", None)
+    shape = tuple(getattr(aval, "shape", ()) or ())
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        dtype = jnp.float32
+    dtype = jax.dtypes.canonicalize_dtype(np.dtype(dtype))
+    return jnp.zeros(shape, dtype)
 
 
 @dataclasses.dataclass
@@ -277,11 +304,10 @@ class SystolicPipeline:
                 return out_buf
 
             const_flat, const_treedef = jax.tree_util.tree_flatten(const_args)
-            shard = jax.shard_map(
+            shard = _shard_map(
                 per_device, mesh=mesh,
                 in_specs=(P(),) * (1 + len(const_flat)),
-                out_specs=P(),
-                check_vma=False)
+                out_specs=P())
             return shard(tuple(stream), *const_flat)
 
         return run
@@ -339,11 +365,10 @@ def pipeline_apply(
             axis)
         return out_buf
 
-    return jax.shard_map(
+    return _shard_map(
         per_device, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, microbatches)
 
 

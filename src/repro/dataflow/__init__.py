@@ -1,0 +1,49 @@
+"""repro.dataflow — the compiler driver for the dataflow template.
+
+One entry point for the paper's whole flow::
+
+    from repro.dataflow import dataflow_jit
+
+    @dataflow_jit(stream_argnums=(1,))
+    def kernel(table, idx, w):
+        return jnp.tanh(table[idx] * w) + 1.0
+
+    kernel(table, idx, w)                       # default backend
+    kernel(table, idx, w, backend="systolic")   # one stage per device
+    c = kernel.lower(table, idx, w)             # Compiled artifact
+    print(c.report()); print(c.simulate().summary())
+
+Internals (all public, all swappable):
+
+* :mod:`~repro.dataflow.options`  — :class:`CompileOptions` (hashable).
+* :mod:`~repro.dataflow.passes`   — the ordered pass pipeline
+  (trace → memdep → partition → rewrite → decouple → schedule); each pass
+  delegates to the paper-faithful implementation in ``repro.core``.
+* :mod:`~repro.dataflow.backends` — the execution-backend registry
+  (``sequential`` / ``emulated`` / ``systolic`` / ``xla`` / ``simulate``).
+* :mod:`~repro.dataflow.schedule` — static schedule analysis and the
+  Fig. 2/5 simulation report.
+"""
+
+from .backends import (Backend, BackendUnavailableError, available_backends,
+                       execute_backends, get_backend, register_backend,
+                       registered_backends, unregister_backend)
+from .driver import (Compiled, cache_stats, clear_cache, compile,
+                     dataflow_jit)
+from .options import CompileOptions
+from .passes import (CompileContext, DecouplePass, MemoryDepPass, Pass,
+                     PartitionPass, PassPipeline, RewritePass, SchedulePass,
+                     TracePass, default_pipeline)
+from .schedule import Schedule, SimReport, StageSummary, fused_stage
+
+__all__ = [
+    "Backend", "BackendUnavailableError", "available_backends",
+    "execute_backends", "get_backend", "register_backend",
+    "registered_backends", "unregister_backend",
+    "Compiled", "cache_stats", "clear_cache", "compile", "dataflow_jit",
+    "CompileOptions",
+    "CompileContext", "Pass", "PassPipeline", "TracePass", "MemoryDepPass",
+    "PartitionPass", "RewritePass", "DecouplePass", "SchedulePass",
+    "default_pipeline",
+    "Schedule", "SimReport", "StageSummary", "fused_stage",
+]

@@ -1,0 +1,78 @@
+"""Compilation options for the dataflow compiler driver.
+
+:class:`CompileOptions` is a frozen, hashable value object: together with
+the traced jaxpr it forms the key of the driver's in-memory compilation
+cache, so every field must be hashable.  Mappings passed for
+``latency_table`` / ``regions`` are frozen into sorted tuples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+from ..core.cdfg import LatencyModel
+
+
+def _freeze(value: Any) -> tuple:
+    if isinstance(value, Mapping):
+        return tuple(sorted(value.items()))
+    return tuple(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Everything that parameterizes a :func:`repro.dataflow.compile` run.
+
+    Partitioning (Algorithm 1):
+      ``policy``             — "paper" | "fused" | "maximal" | "cost_aware".
+      ``duplicate_cheap``    — §III-B1 cheap-op duplication rewrite.
+      ``channel_cost_bytes`` — merge threshold for the cost_aware policy.
+
+    Front end:
+      ``latency_table`` / ``latency_default`` / ``long_threshold`` — the
+        abstract latency model (overrides ``DEFAULT_LATENCY``).
+      ``regions``          — invar index → region name (user alias results).
+      ``add_memory_edges`` — §III-A memory-ordering edges.
+      ``loop``             — treat the function as a loop body
+        ``body(carry, *xs) -> new_carry`` and add carry back-edges.
+      ``nonaliasing_carries`` — carry indices whose back-edge is dropped
+        (the paper's user annotation; only meaningful with ``loop=True``).
+
+    Execution:
+      ``backend``        — default backend name for ``Compiled.__call__``.
+      ``stream_argnums`` — argument positions that vary per microbatch when
+        streaming through the systolic executors.
+    """
+
+    policy: str = "paper"
+    backend: str = "sequential"
+    duplicate_cheap: bool = True
+    channel_cost_bytes: int = 4096
+    latency_table: Any = ()
+    latency_default: int = 1
+    long_threshold: int = 1
+    regions: Any = ()
+    add_memory_edges: bool = True
+    loop: bool = False
+    nonaliasing_carries: Any = ()
+    stream_argnums: Any = (0,)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "latency_table", _freeze(self.latency_table))
+        object.__setattr__(self, "regions", _freeze(self.regions))
+        object.__setattr__(self, "stream_argnums",
+                           tuple(self.stream_argnums))
+        object.__setattr__(self, "nonaliasing_carries",
+                           tuple(self.nonaliasing_carries))
+
+    def latency_model(self) -> LatencyModel:
+        return LatencyModel(table=dict(self.latency_table),
+                            default=self.latency_default,
+                            long_threshold=self.long_threshold)
+
+    def regions_map(self) -> dict[int, str]:
+        return dict(self.regions)
+
+    def replace(self, **changes: Any) -> "CompileOptions":
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,220 @@
+"""The pass pipeline of the dataflow compiler driver.
+
+Each pass is a named object with a ``run(ctx)`` method that reads/writes
+fields of a shared :class:`CompileContext`.  The default pipeline mirrors
+the paper's flow —
+
+    trace → memdep → partition → rewrite → decouple → schedule
+
+— with each step delegating to the corresponding ``repro.core`` function
+(the paper-faithful implementations stay in core; this module only
+orders and names them).  Pipelines are ordinary immutable value objects:
+``default_pipeline().replace("partition", MyPartitionPass())`` swaps a
+pass, ``.without("rewrite")`` drops one, ``.insert_after(...)`` adds one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+from ..core.cdfg import (CDFG, add_memory_order_edges,
+                         annotate_memory_regions)
+from ..core.decouple import decouple
+from ..core.partition import (duplicate_cheap_rewrite,
+                              materialize, merge_costly_boundaries,
+                              stage_groups)
+from .options import CompileOptions
+from .schedule import Schedule
+
+
+@dataclasses.dataclass
+class CompileContext:
+    """Mutable state threaded through the pass pipeline."""
+
+    fn: Callable
+    example_args: tuple
+    options: CompileOptions
+    closed_jaxpr: Any = None
+    out_tree: Any = None        # treedef of fn's return value
+    cdfg: CDFG | None = None
+    plan: Any = None            # StagePlan from the partition pass
+    partition: Any = None
+    program: Any = None         # DecoupledProgram
+    schedule: Schedule | None = None
+    timings: dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class Pass:
+    """Base class for driver passes; subclasses set ``name``."""
+
+    name = "pass"
+
+    def run(self, ctx: CompileContext) -> None:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class TracePass(Pass):
+    """Front end: jaxpr trace + raw CDFG (SSA data edges only).
+
+    With ``options.loop`` the function is a loop body and carry back-edges
+    are added per leaf of the carry example, minus ``nonaliasing_carries``
+    (the §III-A user annotation) — the cyclic §III view.
+    """
+
+    name = "trace"
+
+    def run(self, ctx: CompileContext) -> None:
+        opts = ctx.options
+        closed, out_shape = jax.make_jaxpr(
+            ctx.fn, return_shape=True)(*ctx.example_args)
+        ctx.closed_jaxpr = closed
+        ctx.out_tree = jax.tree_util.tree_structure(out_shape)
+        carry_pairs: Sequence[tuple[int, int]] = ()
+        if opts.loop:
+            carry_example = ctx.example_args[0] if ctx.example_args else None
+            n_carry = len(jax.tree_util.tree_leaves(carry_example))
+            skip = set(opts.nonaliasing_carries)
+            carry_pairs = [(i, i) for i in range(n_carry) if i not in skip]
+        ctx.cdfg = CDFG.from_jaxpr(
+            closed,
+            latency_model=opts.latency_model(),
+            add_memory_edges=False,
+            annotate_regions=False,
+            carry_pairs=carry_pairs,
+        )
+
+
+class MemoryDepPass(Pass):
+    """§III-A memory-dependence analysis: region discovery + ordering
+    edges between memory ops of a shared region."""
+
+    name = "memdep"
+
+    def run(self, ctx: CompileContext) -> None:
+        regions = ctx.options.regions_map() or None
+        annotate_memory_regions(ctx.cdfg, regions)
+        if ctx.options.add_memory_edges:
+            add_memory_order_edges(ctx.cdfg)
+
+
+class PartitionPass(Pass):
+    """Algorithm 1: SCCs → condensation → topo order → stage groups,
+    materialized into a Partition with FIFO channels."""
+
+    name = "partition"
+
+    def run(self, ctx: CompileContext) -> None:
+        ctx.plan = stage_groups(ctx.cdfg, policy=ctx.options.policy)
+        ctx.partition = materialize(ctx.cdfg, ctx.plan)
+
+
+class RewritePass(Pass):
+    """Post-partition rewrites: cost-aware boundary merging (for the
+    ``cost_aware`` policy) and §III-B1 cheap-op duplication; channels are
+    re-derived afterwards."""
+
+    name = "rewrite"
+
+    def run(self, ctx: CompileContext) -> None:
+        opts = ctx.options
+        if opts.policy == "cost_aware" and len(ctx.plan.groups) > 1:
+            ctx.plan = merge_costly_boundaries(
+                ctx.cdfg, ctx.plan, opts.channel_cost_bytes)
+            ctx.partition = materialize(ctx.cdfg, ctx.plan)
+        if opts.duplicate_cheap and opts.policy != "fused":
+            duplicate_cheap_rewrite(ctx.partition)
+
+
+class DecouplePass(Pass):
+    """Access/execute decoupling: one executable program per stage."""
+
+    name = "decouple"
+
+    def run(self, ctx: CompileContext) -> None:
+        ctx.program = decouple(ctx.partition)
+
+
+class SchedulePass(Pass):
+    """Static schedule analysis: per-stage summaries (II, latency,
+    memory-in-SCC), channel totals, and the lazily-built systolic
+    executor. Feeds ``Compiled.report()`` / ``.simulate()``."""
+
+    name = "schedule"
+
+    def run(self, ctx: CompileContext) -> None:
+        ctx.schedule = Schedule.from_program(
+            ctx.program, stream_argnums=ctx.options.stream_argnums)
+
+
+@dataclasses.dataclass(frozen=True)
+class PassPipeline:
+    """An ordered, inspectable sequence of passes."""
+
+    passes: tuple[Pass, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "passes", tuple(self.passes))
+        names = self.names()
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pass names: {names}")
+
+    def names(self) -> list[str]:
+        return [p.name for p in self.passes]
+
+    def __iter__(self):
+        return iter(self.passes)
+
+    def __getitem__(self, name: str) -> Pass:
+        for p in self.passes:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+    def index(self, name: str) -> int:
+        for i, p in enumerate(self.passes):
+            if p.name == name:
+                return i
+        raise KeyError(name)
+
+    # -- structural edits (return new pipelines) -----------------------------
+
+    def replace(self, name: str, new_pass: Pass) -> "PassPipeline":
+        i = self.index(name)
+        return PassPipeline(self.passes[:i] + (new_pass,)
+                            + self.passes[i + 1:])
+
+    def without(self, name: str) -> "PassPipeline":
+        i = self.index(name)
+        return PassPipeline(self.passes[:i] + self.passes[i + 1:])
+
+    def insert_after(self, name: str, new_pass: Pass) -> "PassPipeline":
+        i = self.index(name)
+        return PassPipeline(self.passes[:i + 1] + (new_pass,)
+                            + self.passes[i + 1:])
+
+    # -- execution ------------------------------------------------------------
+
+    def run(self, ctx: CompileContext, *, start: int = 0,
+            stop: int | None = None) -> CompileContext:
+        for p in self.passes[start:stop]:
+            t0 = time.perf_counter()
+            p.run(ctx)
+            ctx.timings[p.name] = time.perf_counter() - t0
+        return ctx
+
+    def signature(self) -> tuple:
+        """Identity of the pipeline structure, for cache keying."""
+        return tuple((p.name, type(p).__module__ + "." + type(p).__qualname__)
+                     for p in self.passes)
+
+
+def default_pipeline() -> PassPipeline:
+    return PassPipeline((TracePass(), MemoryDepPass(), PartitionPass(),
+                         RewritePass(), DecouplePass(), SchedulePass()))

@@ -1,0 +1,262 @@
+"""Static schedule analysis + simulation bridge for compiled artifacts.
+
+:class:`Schedule` is the product of the driver's final pass: per-stage
+summaries (initiation interval, latency, memory-in-SCC classification),
+channel totals, and a lazily-built :class:`~repro.core.pipeline.SystolicPipeline`
+for the streaming executors.  :class:`SimReport` packages the Fig. 2
+occupancy view and the Fig. 5 machine comparison produced by
+``Compiled.simulate()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import networkx as nx
+import numpy as np
+
+from ..core.decouple import DecoupledProgram
+from ..core.pipeline import SystolicPipeline, gpipe_bubble_fraction
+from ..core.simulator import (MemAccess, MemoryModel, SimResult, SimStage,
+                              acp, simulate_conventional, simulate_dataflow)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSummary:
+    """One pipeline stage as the scheduler sees it."""
+
+    id: int
+    prims: tuple[str, ...]
+    ii: int
+    latency: int
+    has_memory: bool
+    has_long: bool
+    regions: tuple[str, ...]
+    mem_in_scc: bool
+    memory_node_ids: tuple[int, ...]
+    in_channel_bytes: int
+    out_channel_bytes: int
+
+
+def _cyclic_nodes(cdfg: Any) -> set[int]:
+    """Nodes on a dependence cycle (the DFS pathology detector)."""
+    g = nx.DiGraph()
+    g.add_nodes_from(n.id for n in cdfg.nodes)
+    g.add_edges_from((e.src, e.dst) for e in cdfg.edges)
+    cyclic: set[int] = set()
+    for comp in nx.strongly_connected_components(g):
+        if len(comp) > 1 or any(g.has_edge(n, n) for n in comp):
+            cyclic |= comp
+    return cyclic
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Static pipeline schedule for a decoupled program."""
+
+    program: DecoupledProgram
+    stream_argnums: tuple[int, ...]
+    stages: list[StageSummary]
+    num_channels: int
+    channel_bytes: int
+    _pipeline: SystolicPipeline | None = None
+
+    @classmethod
+    def from_program(cls, program: DecoupledProgram,
+                     *, stream_argnums: Sequence[int] = (0,)) -> "Schedule":
+        part = program.partition
+        cdfg = part.cdfg
+        cyclic = _cyclic_nodes(cdfg)
+        in_bytes = {s.id: 0 for s in part.stages}
+        out_bytes = {s.id: 0 for s in part.stages}
+        for c in part.channels:
+            out_bytes[c.src_stage] += c.nbytes
+            in_bytes[c.dst_stage] += c.nbytes
+        summaries = []
+        for s in part.stages:
+            mem_ids = tuple(n for n in s.node_ids if cdfg.node(n).is_memory)
+            summaries.append(StageSummary(
+                id=s.id,
+                prims=tuple(cdfg.node(n).prim for n in s.node_ids),
+                ii=s.ii,
+                latency=s.latency,
+                has_memory=s.has_memory,
+                has_long=s.has_long,
+                regions=s.regions,
+                mem_in_scc=any(n in cyclic for n in mem_ids),
+                memory_node_ids=mem_ids,
+                in_channel_bytes=in_bytes[s.id],
+                out_channel_bytes=out_bytes[s.id],
+            ))
+        return cls(program, tuple(stream_argnums), summaries,
+                   num_channels=len(part.channels),
+                   channel_bytes=sum(c.nbytes for c in part.channels))
+
+    # -- derived quantities ---------------------------------------------------
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def pipeline_ii(self) -> int:
+        """Steady-state initiation interval: the slowest stage's II."""
+        return max([1] + [s.ii for s in self.stages])
+
+    @property
+    def total_latency(self) -> int:
+        return sum(s.latency for s in self.stages)
+
+    def bubble_fraction(self, microbatches: int) -> float:
+        return gpipe_bubble_fraction(self.num_stages, microbatches)
+
+    @property
+    def pipeline(self) -> SystolicPipeline:
+        """The systolic executor (built on first use: boundary packing
+        allocates example payloads, so it is not free for large programs)."""
+        if self._pipeline is None:
+            self._pipeline = SystolicPipeline(
+                self.program, stream_argnums=self.stream_argnums)
+        return self._pipeline
+
+    # -- Fig. 2 occupancy -----------------------------------------------------
+
+    def occupancy(self, microbatches: int) -> list[list[int]]:
+        """Fig. 2 grid: ``occ[t][s]`` is the microbatch in stage ``s`` at
+        tick ``t`` (-1 = idle).  Microbatch m occupies stage s at tick
+        ``t = m + s``."""
+        S, T = self.num_stages, microbatches
+        return [[t - s if 0 <= t - s < T else -1 for s in range(S)]
+                for t in range(T + S - 1)]
+
+    def render_occupancy(self, microbatches: int = 6) -> str:
+        occ = self.occupancy(microbatches)
+        lines = ["tick " + " ".join(f"s{s}" for s in
+                                    range(self.num_stages))]
+        for t, row in enumerate(occ):
+            cells = " ".join(f"{m:>2}" if m >= 0 else " ." for m in row)
+            lines.append(f"{t:>4} {cells}")
+        return "\n".join(lines)
+
+    # -- simulator bridge -----------------------------------------------------
+
+    def sim_stages(
+        self,
+        traces: Mapping[str, Any] | Sequence[MemAccess] | None = None,
+        *,
+        n_iters: int = 2048,
+        seed: int = 0,
+        address_space: int = 4 << 20,
+    ) -> list[SimStage]:
+        """Build cycle-simulator stages from the partition.
+
+        ``traces`` assigns memory address streams to the memory operations:
+
+        * a mapping ``region name -> MemAccess | [MemAccess]`` (one entry
+          per memory region, as :func:`repro.core.simulator.stages_from_partition`);
+        * a sequence of :class:`MemAccess`, assigned positionally to memory
+          ops in pipeline-stage order (the Fig. 5 benchmark convention);
+        * ``None`` — synthetic uniform-random word addresses, the
+          cache-hostile default.
+        """
+        rng = np.random.default_rng(seed)
+        out: list[SimStage] = []
+        if traces is None or isinstance(traces, Mapping):
+            by_region = dict(traces or {})
+        else:
+            by_region = None
+            trace_list = list(traces)
+            ti = 0
+        for s in self.stages:
+            accesses: list[MemAccess] = []
+            if by_region is not None:
+                for region in s.regions:
+                    tr = by_region.get(region)
+                    if tr is None and traces is None:
+                        tr = MemAccess(region, rng.integers(
+                            0, address_space, n_iters) * 4)
+                        by_region[region] = tr
+                    if tr is None:
+                        continue
+                    accesses.extend(tr if isinstance(tr, list) else [tr])
+            else:
+                for _ in s.memory_node_ids:
+                    if ti < len(trace_list):
+                        accesses.append(trace_list[ti])
+                        ti += 1
+            out.append(SimStage(
+                name=f"s{s.id}",
+                ii=s.ii,
+                latency=max(1, s.latency),
+                accesses=accesses,
+                mem_in_scc=s.mem_in_scc,
+            ))
+        return out
+
+
+def fused_stage(stages: Sequence[SimStage]) -> SimStage:
+    """The conventional-HLS counterpart: every op in one static schedule."""
+    if not stages:
+        return SimStage(name="fused", ii=1, latency=1)
+    return SimStage(
+        name="fused",
+        ii=max(st.ii for st in stages),
+        latency=sum(st.latency for st in stages),
+        accesses=[a for st in stages for a in st.accesses],
+        mem_in_scc=any(st.mem_in_scc for st in stages),
+    )
+
+
+@dataclasses.dataclass
+class SimReport:
+    """The Fig. 2/5 schedule report returned by ``Compiled.simulate()``."""
+
+    schedule: Schedule
+    stages: list[SimStage]
+    dataflow: SimResult
+    conventional: SimResult
+    mem: MemoryModel
+    n_iters: int
+    microbatches: int
+
+    @property
+    def speedup(self) -> float:
+        return self.conventional.cycles / max(1, self.dataflow.cycles)
+
+    def summary(self) -> str:
+        df, cv = self.dataflow, self.conventional
+        lines = [
+            f"simulated {self.n_iters} iterations on memory model "
+            f"{self.mem.name!r}:",
+            f"  conventional (fused) : {cv.cycles_per_iter:8.2f} cycles/iter"
+            f"  ({cv.cycles} cycles)",
+            f"  dataflow  (decoupled): {df.cycles_per_iter:8.2f} cycles/iter"
+            f"  ({df.cycles} cycles)",
+            f"  speedup              : {self.speedup:8.2f}x",
+            "  per-stage stalls     : "
+            + ", ".join(f"{k}={v}" for k, v in df.stage_stall_cycles.items()),
+            "",
+            f"Fig. 2 occupancy ({self.microbatches} microbatches, "
+            f"{self.schedule.num_stages} stages, bubble fraction "
+            f"{self.schedule.bubble_fraction(self.microbatches):.2f}):",
+            self.schedule.render_occupancy(self.microbatches),
+        ]
+        return "\n".join(lines)
+
+
+def simulate_schedule(
+    schedule: Schedule,
+    *,
+    n_iters: int = 2048,
+    mem: MemoryModel | None = None,
+    traces: Any = None,
+    fifo_depth: int = 8,
+    microbatches: int = 6,
+    seed: int = 0,
+) -> SimReport:
+    mem = mem or acp()
+    stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth)
+    cv = simulate_conventional([fused_stage(stages)], mem, n_iters)
+    return SimReport(schedule, stages, df, cv, mem, n_iters, microbatches)

@@ -8,9 +8,10 @@ pure-jnp oracle used by the allclose test sweeps.
 
 from .ops import (matmul, flash_attention, decode_attention, rmsnorm, spmv,
                   csr_to_bsr)
-from .decoupled_gather import decoupled_gather, decoupled_gather_ref
+from .decoupled_gather import (decoupled_gather, decoupled_gather_ref,
+                               decoupled_gather_staged)
 from . import ref
 
 __all__ = ["matmul", "flash_attention", "decode_attention", "rmsnorm",
            "spmv", "csr_to_bsr", "decoupled_gather",
-           "decoupled_gather_ref", "ref"]
+           "decoupled_gather_ref", "decoupled_gather_staged", "ref"]

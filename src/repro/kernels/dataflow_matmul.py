@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref):
     # k == 0: reset the accumulator (new output tile begins)
@@ -79,7 +83,7 @@ def dataflow_matmul(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

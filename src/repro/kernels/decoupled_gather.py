@@ -29,6 +29,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUMemorySpace -> MemorySpace around 0.5; support both.
+_ANY = getattr(pltpu, "ANY", None)
+if _ANY is None:  # pragma: no cover - newer jax
+    _ANY = pltpu.MemorySpace.ANY
+
 
 def _make_kernel(fn):
     def kernel(idx_ref, table_ref, o_ref, buf_ref, sem_ref):
@@ -80,7 +85,7 @@ def decoupled_gather(
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(N,),
-            in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+            in_specs=[pl.BlockSpec(memory_space=_ANY)],
             out_specs=pl.BlockSpec((1, D), lambda i, idx: (i, 0)),
             scratch_shapes=[
                 pltpu.VMEM((2, D), table.dtype),      # the 2-slot FIFO
@@ -98,3 +103,31 @@ def decoupled_gather_ref(idx: jax.Array, table: jax.Array,
     if fn is None:
         fn = lambda row: jnp.tanh(row * 2.0)
     return jax.vmap(fn)(table[idx])
+
+
+def _default_row_fn(row):
+    return jnp.tanh(row * 2.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _staged_gather(fn, backend):
+    from repro.dataflow import dataflow_jit
+
+    def gather_fn(idx, table):
+        return jax.vmap(fn)(table[idx])
+
+    return dataflow_jit(gather_fn, stream_argnums=(0,), backend=backend)
+
+
+def decoupled_gather_staged(idx: jax.Array, table: jax.Array, *,
+                            fn=None, backend: str = "sequential"
+                            ) -> jax.Array:
+    """The same decoupling, derived by the compiler driver instead of
+    hand-written Pallas: ``repro.dataflow`` partitions the reference
+    computation at the gather (Algorithm 1) and executes it on the chosen
+    backend.  Portable fallback for hosts where the TPU kernel can't run;
+    bit-identical to :func:`decoupled_gather_ref`.
+
+    The driver wrapper is memoized per (fn, backend) so repeated calls
+    skip retracing (``fn`` must therefore be a stable function object)."""
+    return _staged_gather(fn or _default_row_fn, backend)(idx, table)

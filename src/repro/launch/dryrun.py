@@ -103,11 +103,56 @@ def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
     }
 
 
+def dataflow_census(cfg, shape, *, opt_cfg=None) -> dict:
+    """Stage/channel census of the cell's step function through the
+    ``repro.dataflow`` compiler driver (analysis passes only: the step is
+    traced with abstract inputs, partitioned by Algorithm 1, and the
+    schedule summarized — nothing executes)."""
+    from repro.configs.base import SHAPES as _SHAPES
+    from repro.dataflow import compile as dataflow_compile
+    from repro.launch import steps
+    from repro.models import model as M
+    from repro.optim import adamw
+
+    if isinstance(shape, str):
+        shape = _SHAPES[shape]
+    specs = M.input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        fn = steps.make_train_step(cfg, opt_cfg)
+        args = (steps.abstract_train_state(cfg, opt_cfg), specs)
+    else:
+        params = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        if shape.kind == "prefill":
+            fn = steps.make_forward(cfg)
+            args = (params, specs.get("tokens", specs.get("embeds")))
+        else:
+            fn = steps.make_decode_step(cfg)
+            args = (params, specs["token"], specs["cache"],
+                    specs["length"])
+    # use_cache=False: census cells are compiled once each, and caching
+    # them would pin every model-sized jaxpr + pass products for the
+    # whole matrix run
+    compiled = dataflow_compile(fn, *args, backend="xla", use_cache=False)
+    sch = compiled.schedule
+    return {
+        "ops": len(compiled.cdfg.nodes),
+        "memory_ops": len(compiled.cdfg.memory_nodes),
+        "long_ops": len(compiled.cdfg.long_nodes),
+        "stages": sch.num_stages,
+        "channels": sch.num_channels,
+        "channel_bytes": sch.channel_bytes,
+        "pipeline_ii": sch.pipeline_ii,
+    }
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: str = "experiments/dryrun",
              save: bool = True, variant: str | None = None,
              overrides: dict | None = None,
-             ep_serve: bool = False) -> dict:
+             ep_serve: bool = False,
+             dataflow: bool = True) -> dict:
     """``variant``/``overrides``/``ep_serve`` support the §Perf hillclimb:
     overrides are dataclasses.replace'd onto the config (e.g.
     ``{"mla_absorbed": True, "kv_cache_dtype": "int8"}``)."""
@@ -145,6 +190,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         rec["compile_s"] = round(time.time() - t1, 1)
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jax<0.6 returns [dict]
+            ca = ca[0] if ca else {}
         flops = float(ca.get("flops", 0.0))
         bytes_acc = float(ca.get("bytes accessed", 0.0))
         rec["hlo_flops"] = flops
@@ -166,6 +213,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
         # analytic per-device weights+state bytes (the fit check)
         rec["fit"] = _fit_analysis(cfg, shape, n_chips)
+
+        # stage/channel census from the dataflow compiler driver
+        if dataflow:
+            try:
+                rec["dataflow"] = dataflow_census(cfg, shape)
+            except Exception as e:  # noqa: BLE001 — census is best-effort
+                rec["dataflow"] = {"error": f"{type(e).__name__}: {e}"}
 
         # roofline: cost_analysis + HLO text are already per-partition
         rec["roofline"] = roofline_terms(flops, bytes_acc,

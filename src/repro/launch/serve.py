@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import load_config, reduced as reduce_config
+from ..dataflow import dataflow_jit
 from ..models import decode_step as _decode, init_params, prefill as _prefill
 
 log = logging.getLogger("repro.serve")
@@ -53,10 +54,32 @@ class BatchedServer:
         self.params = params
         self.max_len = max_len
         self.greedy = greedy
-        self._prefill = jax.jit(
-            lambda p, t: _prefill(p, t, cfg, max_len))
-        self._decode = jax.jit(
-            lambda p, tok, cache, ln: _decode(p, tok, cache, ln, cfg))
+        # Both steps go through the dataflow compiler driver.  The "xla"
+        # backend executes exactly as jax.jit did, but the Compiled
+        # artifact (`.lower(...)`) exposes the Algorithm-1 stage/channel
+        # analysis of the serving steps — see dataflow_report().
+        # on_error="fallback": a config whose step trips the analysis
+        # passes still serves (plain jax.jit), it just loses the report.
+        self._prefill = dataflow_jit(
+            lambda p, t: _prefill(p, t, cfg, max_len), backend="xla",
+            on_error="fallback")
+        self._decode = dataflow_jit(
+            lambda p, tok, cache, ln: _decode(p, tok, cache, ln, cfg),
+            backend="xla", on_error="fallback")
+
+    def dataflow_report(self, requests: list["Request"]) -> str:
+        """Stage/channel report of the decode step for this batch shape."""
+        B = len(requests)
+        tok = jnp.zeros((B,), jnp.int32)
+        try:
+            _, cache = jax.eval_shape(
+                lambda p, t: _prefill(p, t, self.cfg, self.max_len),
+                self.params, jax.ShapeDtypeStruct((B, 8), jnp.int32))
+            compiled = self._decode.lower(self.params, tok, cache,
+                                          jnp.asarray(8, jnp.int32))
+            return compiled.report()
+        except Exception as e:  # noqa: BLE001 — report is best-effort
+            return f"(dataflow analysis unavailable: {type(e).__name__}: {e})"
 
     def serve(self, requests: list[Request]) -> list[Result]:
         B = len(requests)
@@ -76,10 +99,18 @@ class BatchedServer:
                else jnp.argmax(logits, -1))
         t1 = time.time()
         length = jnp.asarray(S, jnp.int32)
+        # lower once: shapes are fixed after prefill, so the decode loop
+        # calls the Compiled artifact directly instead of re-keying the
+        # params+cache pytree every token
+        try:
+            decode = self._decode.lower(self.params, tok.astype(jnp.int32),
+                                        cache, length)
+        except Exception:  # noqa: BLE001 — analysis failed; wrapper
+            decode = self._decode          # falls back to jax.jit per call
         for step in range(gen):
             tokens.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, tok.astype(jnp.int32),
-                                         cache, length + step)
+            logits, cache = decode(self.params, tok.astype(jnp.int32),
+                                   cache, length + step)
             tok = jnp.argmax(logits, -1)
         jax.block_until_ready(logits)
         decode_s = time.time() - t1
@@ -113,6 +144,8 @@ def main() -> None:
                                     size=(args.prompt_len,)).astype(np.int32),
                     args.gen)
             for i in range(args.requests)]
+    log.info("decode-step dataflow analysis:\n%s",
+             server.dataflow_report(reqs))
     t0 = time.time()
     results = server.serve(reqs)
     dt = time.time() - t0

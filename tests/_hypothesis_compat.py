@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim: property tests degrade to skips, not errors.
+
+``hypothesis`` is listed in requirements.txt but is not guaranteed to be
+present (the hermetic test container installs nothing).  Importing this
+module instead of ``hypothesis`` directly keeps the deterministic tests in a
+module runnable: when hypothesis is missing, ``@given`` turns the test into
+a ``pytest.importorskip("hypothesis")`` skip and the strategy combinators
+become inert stubs so module-level ``st.*`` expressions still evaluate.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Absorbs any strategy construction (st.lists(st.integers(...)))."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # deliberately NOT functools.wraps: the runner must expose a
+            # zero-arg signature or pytest treats @given params as fixtures
+            def runner():
+                pytest.importorskip("hypothesis")
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

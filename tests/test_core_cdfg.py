@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # noqa: E402 — skips when hypothesis is missing
 
 from repro.core import (CDFG, LatencyModel, partition_cdfg, decouple,
                         run_stages_sequential, decoupled_call)

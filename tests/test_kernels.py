@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # noqa: E402 — skips when hypothesis is missing
 
 from repro.kernels import (csr_to_bsr, decode_attention, flash_attention,
                            matmul, ref, rmsnorm, spmv)

@@ -106,7 +106,8 @@ def test_collectives_in_dp_tp_mesh():
 
         x = jnp.ones((8, 16), jnp.float32)
         w = jnp.ones((16, 32), jnp.float32)
-        out = jax.jit(jax.shard_map(
+        from repro.core import shard_map_compat
+        out = jax.jit(shard_map_compat(
             f, mesh=mesh,
             in_specs=(P('data', 'model'), P('model', None)),
             out_specs=P('data', None)))(x, w)

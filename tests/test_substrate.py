@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # noqa: E402 — skips when hypothesis is missing
 
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, prefetched, synthetic_stream
@@ -116,8 +116,9 @@ def test_compressed_psum_multidevice():
         def f(xs):
             return compressed_psum(xs, "pod")
 
-        got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                    out_specs=P("pod")))(x)
+        from repro.core import shard_map_compat
+        got = jax.jit(shard_map_compat(f, mesh=mesh, in_specs=P("pod"),
+                                       out_specs=P("pod")))(x)
         want = x.sum(0, keepdims=True).repeat(8, 0)
         # theoretical bound: per-contributor error <= shared_scale/2,
         # 8 contributors; shared scale = max|x| over shards / 127
