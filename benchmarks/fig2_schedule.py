@@ -52,30 +52,9 @@ def main() -> None:
     ]
     mem = acp()
 
-    # re-run the dataflow sim but capture the schedule matrices
-    import repro.core.simulator as sim
-
-    S = len(stages)
-    state = mem.make_state()
-    start = np.zeros((S, n), dtype=np.int64)
-    finish = np.zeros((S, n), dtype=np.int64)
-    for i in range(n):
-        for s, st in enumerate(stages):
-            t = 0
-            if i > 0:
-                t = max(t, start[s, i - 1] + st.ii)
-            if s > 0:
-                t = max(t, finish[s - 1, i])
-            lat = st.latency
-            for acc in st.accesses:
-                a = int(acc.addrs[i]) if i < len(acc.addrs) else -1
-                if a < 0:
-                    continue
-                if i > 0 and bool(acc.sequential[i]):
-                    continue
-                lat = max(lat, st.latency + state.access_latency(a))
-            start[s, i] = t
-            finish[s, i] = t + lat
+    # the real simulator, capturing the per-stage schedule matrices
+    df, start, finish = simulate_dataflow(stages, mem, n,
+                                          return_schedule=True)
 
     print("Dataflow engine (Fig. 2 bottom): stalls stay inside 'fetch';")
     print("'fma' streams at its II once the FIFO fills.\n")
@@ -86,7 +65,7 @@ def main() -> None:
                   latency=sum(s.latency for s in stages),
                   accesses=[a for s in stages for a in s.accesses])],
         acp(), n)
-    df_cycles = int(finish[-1, -1])
+    df_cycles = df.cycles
     print(f"\nConventional engine (Fig. 2 top): {cv.cycles} cycles for the "
           f"same {n} iterations — {cv.cycles / max(1, df_cycles):.1f}x "
           f"slower (every access serializes into the single schedule).")

@@ -7,7 +7,10 @@ Pipeline per kernel:
      detected automatically (the DFS pathology), traces attached to memory
      stages in pipeline order,
   4. simulate the three machines over four memory configs (ACP, ACP+64KB,
-     HP, HP+64KB) and extrapolate to the Table-I dataset sizes.
+     HP, HP+64KB) at the **full Table-I iteration counts** — the vectorized
+     simulator streams even Floyd–Warshall's 1024^3 iterations chunk by
+     chunk, so no steady-state extrapolation is involved (``--quick``
+     restores the old extrapolated small-window mode for development).
 
 Checked claims (§V-A):
   * conventional accelerators run below the ARM baseline;
@@ -15,23 +18,38 @@ Checked claims (§V-A):
   * caches help conventional more than dataflow (−45.4 % vs −18.7 %);
   * HP (uncached) degrades conventional vs ACP (~40 %);
   * DFS shows no meaningful dataflow gain (memory SCC).
+
+Full-size runs are heavy (≈10⁹ iterations for Floyd–Warshall); the
+independent (kernel × machine × memory) simulations are farmed out to a
+small process pool (``--jobs``).
 """
 
 from __future__ import annotations
 
-import dataclasses
+import argparse
 import json
+import multiprocessing
+import time
 
 import numpy as np
 
-from repro.core.simulator import (MemoryModel, SimStage, acp, acp_cache, hp,
-                                  hp_cache, simulate_conventional,
-                                  simulate_dataflow, simulate_processor)
+from repro.core.simulator import (simulate_conventional, simulate_dataflow,
+                                  simulate_processor, standard_memory_models)
 from repro.dataflow import compile as dataflow_compile, fused_stage
 from .paper_kernels import ALL_KERNELS, PaperKernel
 
+MEM_NAMES = ("ACP", "ACP+64KB", "HP", "HP+64KB")
+SPMV_SCALE = 0.125  # correctness-data scale; traces are full-size anyway
+#: The template's FIFO sizing rule: depth must cover the latency a channel
+#: has to hide — worst access latency plus stage latency, with margin
+#: (§III-B2).  Shallower FIFOs (< ~80 here) make occasional DRAM-latency
+#: spikes eat the producer's lead permanently: every spike then stalls
+#: the pipeline and the whole run degrades to lockstep backpressure.
+FIFO_DEPTH = 256
+MAX_OUTSTANDING = 16  # the paper's "multiple outstanding requests"
 
-def build_stages(k: PaperKernel) -> tuple[list[SimStage], list[SimStage]]:
+
+def build_stages(k: PaperKernel, *, full: bool = True):
     """(dataflow stages, conventional stage) from the compiler driver.
 
     The driver traces the loop body in loop mode (carry back-edges),
@@ -42,31 +60,41 @@ def build_stages(k: PaperKernel) -> tuple[list[SimStage], list[SimStage]]:
         k.loop_body, k.carry_example, *k.body_args,
         loop=True,
         nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
-    df_stages = compiled.sim_stages(traces=list(k.traces.values()))
+    traces = k.full_traces if full else k.traces
+    df_stages = compiled.sim_stages(traces=list(traces.values()))
     return df_stages, [fused_stage(df_stages)]
 
 
-def run_kernel(k: PaperKernel) -> dict:
-    df_stages, conv_stages = build_stages(k)
-    mems = {"ACP": acp, "ACP+64KB": acp_cache, "HP": hp, "HP+64KB": hp_cache}
+def _make_kernel(kname: str) -> PaperKernel:
+    mk = ALL_KERNELS[kname]
+    return mk(SPMV_SCALE) if kname == "spmv" else mk()
+
+
+def run_kernel(k: PaperKernel, *, full: bool = False) -> dict:
+    """Single-kernel, in-process version of the grid (tests / notebooks).
+
+    ``full=False`` simulates the small window and extrapolates (the
+    pre-sweep behaviour); ``full=True`` simulates all Table-I iterations.
+    """
+    n = k.n_iters_full if full else k.n_iters_sim
+    traces = k.full_traces if full else k.traces
+    df_stages, conv_stages = build_stages(k, full=full)
+    base = simulate_processor(k.instrs_per_iter, list(traces.values()), n)
+    t_base = base.runtime_s if full else base.scaled_runtime(k.n_iters_full)
     out: dict = {"kernel": k.name,
                  "stages": len(df_stages),
-                 "n_iters_sim": k.n_iters_sim,
-                 "n_iters_full": k.n_iters_full}
-
-    base = simulate_processor(k.instrs_per_iter, list(k.traces.values()),
-                              k.n_iters_sim)
-    t_base = base.scaled_runtime(k.n_iters_full)
-    out["baseline_s"] = t_base
-
+                 "n_iters_simulated": n,
+                 "n_iters_full": k.n_iters_full,
+                 "fully_simulated": bool(full),
+                 "baseline_s": t_base}
+    mems = standard_memory_models()
     for name, mk in mems.items():
         mem = mk()
-        mem.max_outstanding = 16     # the paper's "multiple outstanding
-        df = simulate_dataflow(df_stages, mem, k.n_iters_sim,
-                               fifo_depth=32)  # FIFO covers lat×throughput
-        cv = simulate_conventional(conv_stages, mk(), k.n_iters_sim)
-        t_df = df.scaled_runtime(k.n_iters_full)
-        t_cv = cv.scaled_runtime(k.n_iters_full)
+        mem.max_outstanding = MAX_OUTSTANDING
+        df = simulate_dataflow(df_stages, mem, n, fifo_depth=FIFO_DEPTH)
+        cv = simulate_conventional(conv_stages, mk(), n)
+        t_df = df.runtime_s if full else df.scaled_runtime(k.n_iters_full)
+        t_cv = cv.runtime_s if full else cv.scaled_runtime(k.n_iters_full)
         out[name] = {
             "dataflow_s": t_df,
             "conventional_s": t_cv,
@@ -77,11 +105,80 @@ def run_kernel(k: PaperKernel) -> dict:
     return out
 
 
-def run_all(scale: float = 0.125) -> dict:
-    results = {}
-    for name, mk in ALL_KERNELS.items():
-        k = mk() if name != "spmv" else mk(scale)
-        results[name] = run_kernel(k)
+def _sim_task(task: tuple) -> tuple:
+    """One (kernel, machine, memory-config) simulation — a top-level
+    function so a spawn-based process pool can run the grid."""
+    kname, what, mem_name, full = task
+    t0 = time.perf_counter()
+    k = _make_kernel(kname)
+    n = k.n_iters_full if full else k.n_iters_sim
+    traces = k.full_traces if full else k.traces
+    if what == "processor":
+        r = simulate_processor(k.instrs_per_iter, list(traces.values()), n)
+    else:
+        df_stages, conv_stages = build_stages(k, full=full)
+        mem = standard_memory_models()[mem_name]()
+        mem.max_outstanding = MAX_OUTSTANDING
+        if what == "dataflow":
+            r = simulate_dataflow(df_stages, mem, n, fifo_depth=FIFO_DEPTH)
+        else:
+            r = simulate_conventional(conv_stages, mem, n)
+    return kname, what, mem_name, r, time.perf_counter() - t0
+
+
+def run_all(*, full: bool = True, jobs: int | None = None,
+            kernels: tuple[str, ...] | None = None) -> dict:
+    kernels = tuple(kernels or ALL_KERNELS)
+    tasks = [(kn, "processor", "", full) for kn in kernels]
+    tasks += [(kn, what, mn, full) for kn in kernels
+              for mn in MEM_NAMES for what in ("dataflow", "conventional")]
+    if jobs is None:
+        jobs = min(2, multiprocessing.cpu_count())
+    sims: dict[tuple, object] = {}
+    pool = (multiprocessing.get_context("spawn").Pool(jobs)
+            if jobs > 1 else None)
+    try:
+        results = (pool.imap_unordered(_sim_task, tasks) if pool
+                   else map(_sim_task, tasks))
+        for kn, what, mn, r, dt in results:
+            sims[(kn, what, mn)] = r
+            print(f"  [{kn}] {what:<12} {mn:<9} "
+                  f"{r.cycles_per_iter:8.2f} cyc/iter  ({dt:.1f}s)",
+                  flush=True)
+    finally:
+        if pool is not None:
+            pool.close()
+            pool.join()
+
+    results: dict[str, dict] = {}
+    for kn in kernels:
+        k = _make_kernel(kn)
+        n = k.n_iters_full if full else k.n_iters_sim
+        base = sims[(kn, "processor", "")]
+        t_base = (base.runtime_s if full
+                  else base.scaled_runtime(k.n_iters_full))
+        out: dict = {"kernel": kn,
+                     "n_iters_simulated": n,
+                     "n_iters_full": k.n_iters_full,
+                     "fully_simulated": bool(full),
+                     "baseline_s": t_base}
+        for mn in MEM_NAMES:
+            df = sims[(kn, "dataflow", mn)]
+            cv = sims[(kn, "conventional", mn)]
+            t_df = (df.runtime_s if full
+                    else df.scaled_runtime(k.n_iters_full))
+            t_cv = (cv.runtime_s if full
+                    else cv.scaled_runtime(k.n_iters_full))
+            out[mn] = {
+                "dataflow_s": t_df,
+                "conventional_s": t_cv,
+                "dataflow_cycles": df.cycles,
+                "conventional_cycles": cv.cycles,
+                "dataflow_vs_baseline": t_base / t_df,
+                "conventional_vs_baseline": t_base / t_cv,
+                "dataflow_vs_conventional": t_cv / t_df,
+            }
+        results[kn] = out
     return results
 
 
@@ -91,9 +188,8 @@ def summarize(results: dict) -> dict:
 
     def best_vs_best(r):
         """Paper §V-A: best dataflow config vs best conventional config."""
-        cfgs = ("ACP", "ACP+64KB", "HP", "HP+64KB")
-        best_df = min(r[m]["dataflow_s"] for m in cfgs)
-        best_cv = min(r[m]["conventional_s"] for m in cfgs)
+        best_df = min(r[m]["dataflow_s"] for m in MEM_NAMES)
+        best_cv = min(r[m]["conventional_s"] for m in MEM_NAMES)
         return best_cv / best_df
     conv_cache_cut = np.mean(
         [1 - r["ACP+64KB"]["conventional_s"] / r["ACP"]["conventional_s"]
@@ -101,7 +197,7 @@ def summarize(results: dict) -> dict:
     df_cache_cut = np.mean(
         [1 - r["ACP+64KB"]["dataflow_s"] / r["ACP"]["dataflow_s"]
          for r in pipelineable])
-    return {
+    summary = {
         "dataflow_vs_conventional_best": {
             n: best_vs_best(r) for n, r in results.items()},
         "avg_best_gain_pipelineable": float(np.mean(
@@ -113,17 +209,25 @@ def summarize(results: dict) -> dict:
         "conv_hp_vs_acp_slowdown": float(np.mean(
             [r["HP"]["conventional_s"] / r["ACP"]["conventional_s"]
              for r in pipelineable])),
-        "dfs_best_gain": float(best_vs_best(results["dfs"])),
     }
+    if "dfs" in results:
+        summary["dfs_best_gain"] = float(best_vs_best(results["dfs"]))
+    return summary
 
 
-def main(out_path: str | None = "experiments/paper_fig5.json") -> dict:
-    results = run_all()
+def main(out_path: str | None = "experiments/paper_fig5.json",
+         *, quick: bool = False, jobs: int | None = None,
+         kernels: tuple[str, ...] | None = None) -> dict:
+    full = not quick
+    mode = ("fully simulated (Table-I iteration counts)" if full
+            else "extrapolated from a small window (--quick)")
+    print(f"Fig. 5 grid — {mode}")
+    results = run_all(full=full, jobs=jobs, kernels=kernels)
     summary = summarize(results)
-    print(f"{'kernel':<16}{'mem':<10}{'conv/base':>10}{'df/base':>10}"
+    print(f"\n{'kernel':<16}{'mem':<10}{'conv/base':>10}{'df/base':>10}"
           f"{'df/conv':>10}")
     for name, r in results.items():
-        for m in ("ACP", "ACP+64KB", "HP", "HP+64KB"):
+        for m in MEM_NAMES:
             print(f"{name:<16}{m:<10}"
                   f"{r[m]['conventional_vs_baseline']:>10.2f}"
                   f"{r[m]['dataflow_vs_baseline']:>10.2f}"
@@ -135,8 +239,30 @@ def main(out_path: str | None = "experiments/paper_fig5.json") -> dict:
         with open(out_path, "w") as f:
             json.dump({"results": results, "summary": summary}, f,
                       indent=1, default=float)
+    if full:
+        # perf trajectory: fig5 grid + vectorized-vs-reference timings
+        # (--quick is a dev loop; only real runs update BENCH_sim.json)
+        from .sweep import measure_perf, update_bench
+        update_bench("fig5", {"fully_simulated": True, "results": results,
+                              "summary": summary})
+        update_bench("perf", measure_perf())
     return {"results": results, "summary": summary}
 
 
+def cli() -> dict:
+    """Entry point parsing flags from sys.argv (shared with run.py, so
+    ``run.py fig5 --quick`` behaves like ``python -m benchmarks.paper_fig5
+    --quick``)."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small-window extrapolated mode (development)")
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--kernels", nargs="*", default=None)
+    ap.add_argument("--out", default="experiments/paper_fig5.json")
+    a, _ = ap.parse_known_args()
+    return main(a.out, quick=a.quick, jobs=a.jobs,
+                kernels=tuple(a.kernels) if a.kernels else None)
+
+
 if __name__ == "__main__":
-    main()
+    cli()

@@ -1,6 +1,11 @@
 """Benchmark driver: one section per paper table/figure + the roofline.
 
-  fig5    — Fig. 5 reproduction (conventional vs dataflow vs ARM baseline)
+  fig5    — Fig. 5 reproduction, fully simulated at Table-I sizes
+            (conventional vs dataflow vs ARM baseline; writes
+            experiments/paper_fig5.json + BENCH_sim.json)
+  sweep   — Fig. 5 design-space sweep (kernels × memory models × FIFO
+            depths × SCC modes; ``--smoke`` after the section name for
+            the reduced CI grid, e.g. ``run.py sweep --smoke``)
   table2  — Table II analogue (stage/channel/duplication accounting)
   kernels — Pallas-kernel micro-bench CSV (name,us_per_call,derived)
   roofline— the (arch × shape) table from dry-run artifacts (if present)
@@ -12,8 +17,16 @@ import sys
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["fig2", "fig5", "table2", "kernels",
-                                "roofline"]
+    # sections are the leading non-flag arguments; everything from the
+    # first "-" on belongs to the section's own argparse (run.py fig5
+    # --quick, run.py sweep --smoke)
+    sections = []
+    for a in sys.argv[1:]:
+        if a.startswith("-"):
+            break
+        sections.append(a)
+    sections = sections or ["fig2", "fig5", "table2", "kernels",
+                            "roofline"]
 
     if "fig2" in sections:
         print("=" * 72)
@@ -28,7 +41,14 @@ def main() -> None:
         print("Fig. 5 reproduction — conventional vs dataflow vs baseline")
         print("=" * 72)
         from . import paper_fig5
-        paper_fig5.main()
+        paper_fig5.cli()  # parse_known_args: run.py fig5 --quick works
+
+    if "sweep" in sections:
+        print("\n" + "=" * 72)
+        print("Fig. 5 design-space sweep — mems × FIFO depths × SCC modes")
+        print("=" * 72)
+        from . import sweep
+        sweep.main()
 
     if "table2" in sections:
         print("\n" + "=" * 72)

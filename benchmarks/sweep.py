@@ -1,0 +1,194 @@
+"""Design-space sweep over the paper's kernels (Fig. 5, §V).
+
+Grid: kernels × memory models (ACP / HP, ±64 KB System Cache) × FIFO
+depths × ``mem_in_scc`` modes, each point **fully simulated** at the
+Table-I iteration counts (no steady-state extrapolation — the vectorized
+simulator streams even Floyd–Warshall's 1024^3 iterations).  This is the
+sweep-style evaluation of de Fine Licht et al. / HIDA applied to the
+dataflow template: how much FIFO depth the latency tolerance needs, what
+the DFS pathology costs, and which memory port wins per kernel.
+
+Also measures the simulator's own perf trajectory (vectorized vs the
+scalar reference at 65536 iterations — the PR's ≥20× acceptance bar) and
+writes everything to ``BENCH_sim.json`` (CI uploads it as an artifact).
+
+``--smoke`` runs a reduced grid at small iteration counts (seconds) for
+CI; the full sweep is a multi-hour batch job — ``--jobs``/-``--kernels``
+split it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import os
+import time
+
+import numpy as np
+
+from repro.core.simulator import (MemAccess, SimStage, acp,
+                                  simulate_conventional, simulate_dataflow,
+                                  standard_memory_models)
+from repro.dataflow import compile as dataflow_compile
+
+from .paper_fig5 import MAX_OUTSTANDING, _make_kernel
+
+BENCH_PATH = "BENCH_sim.json"
+SMOKE_ITERS = 20_000
+#: Full-scale sweep depths: both sized past the DRAM-spike threshold
+#: (see benchmarks.paper_fig5.FIFO_DEPTH) so billion-iteration runs stay
+#: on the solver's fast path; the smoke grid exercises a shallow FIFO.
+FIFO_DEPTHS = (128, 256)
+SCC_MODES = ("auto",)
+
+
+def update_bench(section: str, payload: dict,
+                 path: str = BENCH_PATH) -> None:
+    """Merge one section into the BENCH_sim.json perf-trajectory file."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+
+
+def _perf_pipeline(n: int) -> list[SimStage]:
+    rng = np.random.default_rng(0)
+    return [
+        SimStage("addr", ii=1, latency=2,
+                 accesses=[MemAccess("idx", np.arange(n) * 4)]),
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x", rng.integers(0, 4 << 20, n) * 4),
+                           MemAccess("w", rng.integers(0, 4 << 20, n) * 4)]),
+        SimStage("fma", ii=6, latency=8),
+        SimStage("store", ii=1, latency=2,
+                 accesses=[MemAccess("y", np.arange(n) * 4,
+                                     is_store=True)]),
+    ]
+
+
+def measure_perf(n: int = 65536) -> dict:
+    """Vectorized-vs-reference timing at ``n`` iterations (identical
+    cycle counts asserted) — the perf trajectory tracked across PRs."""
+    stages = _perf_pipeline(n)
+    out: dict = {"n_iters": n}
+    for label, mk in (("ACP", acp),):
+        t0 = time.perf_counter()
+        ref = simulate_dataflow(stages, mk(), n, fifo_depth=32,
+                                reference=True)
+        t1 = time.perf_counter()
+        vec = simulate_dataflow(stages, mk(), n, fifo_depth=32)
+        t2 = time.perf_counter()
+        assert ref.cycles == vec.cycles, (ref.cycles, vec.cycles)
+        cr0 = time.perf_counter()
+        cref = simulate_conventional(stages, mk(), n, reference=True)
+        cr1 = time.perf_counter()
+        cvec = simulate_conventional(stages, mk(), n)
+        cr2 = time.perf_counter()
+        assert cref.cycles == cvec.cycles, (cref.cycles, cvec.cycles)
+        out[label] = {
+            "dataflow_reference_s": t1 - t0,
+            "dataflow_vectorized_s": t2 - t1,
+            "dataflow_speedup": (t1 - t0) / max(1e-9, t2 - t1),
+            "conventional_reference_s": cr1 - cr0,
+            "conventional_vectorized_s": cr2 - cr1,
+            "conventional_speedup": (cr1 - cr0) / max(1e-9, cr2 - cr1),
+            "vectorized_iters_per_s": n / max(1e-9, t2 - t1),
+        }
+    return out
+
+
+def _sweep_task(task: tuple) -> list[dict]:
+    """Sweep one kernel over one memory model (top-level for spawn)."""
+    kname, mem_name, fifo_depths, scc_modes, n_iters = task
+    k = _make_kernel(kname)
+    n = n_iters or k.n_iters_full
+    traces = k.full_traces if n_iters is None else k.traces
+    compiled = dataflow_compile(
+        k.loop_body, k.carry_example, *k.body_args, loop=True,
+        nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
+    mems = {mem_name: standard_memory_models()[mem_name]}
+    res = compiled.sweep(n_iters=n, mems=mems,
+                         fifo_depths=fifo_depths, scc_modes=scc_modes,
+                         traces=list(traces.values()),
+                         max_outstanding=MAX_OUTSTANDING)
+    for row in res.rows:
+        row["kernel"] = kname
+        row["n_iters"] = n
+        row["fully_simulated"] = n_iters is None
+    return res.rows
+
+
+def run_sweep(*, smoke: bool = False, jobs: int | None = None,
+              kernels: tuple[str, ...] | None = None,
+              out_path: str = BENCH_PATH) -> dict:
+    from .paper_kernels import ALL_KERNELS
+    kernels = tuple(kernels or ALL_KERNELS)
+    if smoke:
+        kernels = kernels[:2]
+        mems = ("ACP", "ACP+64KB")
+        fifo_depths, scc_modes, n_iters = (8,), ("auto",), SMOKE_ITERS
+    else:
+        mems = tuple(standard_memory_models())
+        fifo_depths, scc_modes, n_iters = FIFO_DEPTHS, SCC_MODES, None
+    tasks = [(kn, mn, fifo_depths, scc_modes, n_iters)
+             for kn in kernels for mn in mems]
+    if jobs is None:
+        jobs = 1 if smoke else min(2, multiprocessing.cpu_count())
+    rows: list[dict] = []
+    t0 = time.perf_counter()
+    pool = (multiprocessing.get_context("spawn").Pool(jobs)
+            if jobs > 1 else None)
+    try:
+        parts = (pool.imap_unordered(_sweep_task, tasks) if pool
+                 else map(_sweep_task, tasks))
+        for part in parts:
+            rows.extend(part)
+            r = part[0]
+            print(f"  [{r['kernel']}] {r['mem']:<9} done "
+                  f"({len(part)} points)", flush=True)
+    finally:
+        if pool is not None:
+            pool.close()
+            pool.join()
+    rows.sort(key=lambda r: (r["kernel"], r["mem"], r["fifo_depth"],
+                             r["mem_in_scc"]))
+    perf = measure_perf()
+    payload = {"smoke": smoke, "wall_s": time.perf_counter() - t0,
+               "rows": rows}
+    update_bench("sweep", payload, out_path)
+    update_bench("perf", perf, out_path)
+    print(f"\n{'kernel':<16}{'mem':<10}{'fifo':>5}{'df cyc/it':>11}"
+          f"{'conv cyc/it':>13}{'speedup':>9}")
+    for r in rows:
+        print(f"{r['kernel']:<16}{r['mem']:<10}{r['fifo_depth']:>5}"
+              f"{r['dataflow_cpi']:>11.2f}{r['conventional_cpi']:>13.2f}"
+              f"{r['speedup']:>9.2f}")
+    print(f"\nsimulator perf: dataflow {perf['ACP']['dataflow_speedup']:.0f}x"
+          f" / conventional {perf['ACP']['conventional_speedup']:.0f}x"
+          f" vectorized-vs-reference at {perf['n_iters']} iters; "
+          f"wrote {out_path}")
+    return payload
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid at small iteration counts (CI)")
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--kernels", nargs="*", default=None)
+    ap.add_argument("--out", default=BENCH_PATH)
+    a, _ = ap.parse_known_args()
+    return run_sweep(smoke=a.smoke, jobs=a.jobs,
+                     kernels=tuple(a.kernels) if a.kernels else None,
+                     out_path=a.out)
+
+
+if __name__ == "__main__":
+    main()

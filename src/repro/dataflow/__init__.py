@@ -34,7 +34,8 @@ from .options import CompileOptions
 from .passes import (CompileContext, DecouplePass, MemoryDepPass, Pass,
                      PartitionPass, PassPipeline, RewritePass, SchedulePass,
                      TracePass, default_pipeline)
-from .schedule import Schedule, SimReport, StageSummary, fused_stage
+from .schedule import (Schedule, SimReport, StageSummary, SweepResult,
+                       fused_stage, simulate_schedule, sweep_schedule)
 
 __all__ = [
     "Backend", "BackendUnavailableError", "available_backends",
@@ -45,5 +46,6 @@ __all__ = [
     "CompileContext", "Pass", "PassPipeline", "TracePass", "MemoryDepPass",
     "PartitionPass", "RewritePass", "DecouplePass", "SchedulePass",
     "default_pipeline",
-    "Schedule", "SimReport", "StageSummary", "fused_stage",
+    "Schedule", "SimReport", "StageSummary", "SweepResult", "fused_stage",
+    "simulate_schedule", "sweep_schedule",
 ]

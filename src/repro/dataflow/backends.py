@@ -186,7 +186,9 @@ class XLABackend(Backend):
 @register_backend
 class SimulateBackend(Backend):
     """Discrete-event machine model (Fig. 2/5); ignores call arguments and
-    returns a SimReport."""
+    returns a SimReport.  Also hosts the design-space sweep
+    (``Compiled.sweep`` dispatches here), so an alternative simulation
+    backend can override both entry points together."""
 
     name = "simulate"
     kind = "analyze"
@@ -194,3 +196,7 @@ class SimulateBackend(Backend):
     def execute(self, compiled: Any, args: Sequence[Any]) -> Any:
         del args
         return compiled.simulate()
+
+    def sweep(self, compiled: Any, **kwargs: Any) -> Any:
+        from .schedule import sweep_schedule
+        return sweep_schedule(compiled.schedule, **kwargs)

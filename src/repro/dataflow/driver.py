@@ -37,6 +37,8 @@ class Compiled:
       ``stream(*args)``   — stream microbatches through the emulated
         systolic pipeline (stream args carry a leading microbatch axis).
       ``simulate(...)``   — discrete-event Fig. 2/5 schedule report.
+      ``sweep(...)``      — design-space sweep over memory models × FIFO
+        depths × SCC modes (fully simulated grid; ``SweepResult``).
       ``report()``        — per-stage latency / channel summary (text).
       ``cdfg`` / ``partition`` / ``program`` / ``schedule`` — the pass
         products, for inspection and downstream tools.
@@ -104,6 +106,13 @@ class Compiled:
         fused conventional engine (see
         :func:`repro.dataflow.schedule.simulate_schedule`)."""
         return simulate_schedule(self.schedule, n_iters=n_iters, **kwargs)
+
+    def sweep(self, **kwargs: Any) -> Any:
+        """Design-space sweep: grid the cycle simulator over memory models
+        × FIFO depths × ``mem_in_scc`` modes, fully simulated (see
+        :func:`repro.dataflow.schedule.sweep_schedule`; dispatched through
+        the ``simulate`` backend)."""
+        return get_backend("simulate").sweep(self, **kwargs)
 
     def sim_stages(self, traces: Any = None, **kwargs: Any):
         """Cycle-simulator stage specs (II/latency/mem-in-SCC from the real

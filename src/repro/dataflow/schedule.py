@@ -5,13 +5,15 @@ summaries (initiation interval, latency, memory-in-SCC classification),
 channel totals, and a lazily-built :class:`~repro.core.pipeline.SystolicPipeline`
 for the streaming executors.  :class:`SimReport` packages the Fig. 2
 occupancy view and the Fig. 5 machine comparison produced by
-``Compiled.simulate()``.
+``Compiled.simulate()``; :class:`SweepResult` / :func:`sweep_schedule`
+grid the same machines over memory models × FIFO depths × SCC modes
+(``Compiled.sweep()``, the Fig. 5 design-space sweep).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import networkx as nx
 import numpy as np
@@ -19,7 +21,8 @@ import numpy as np
 from ..core.decouple import DecoupledProgram
 from ..core.pipeline import SystolicPipeline, gpipe_bubble_fraction
 from ..core.simulator import (MemAccess, MemoryModel, SimResult, SimStage,
-                              acp, simulate_conventional, simulate_dataflow)
+                              acp, simulate_conventional, simulate_dataflow,
+                              standard_memory_models)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,7 +154,9 @@ class Schedule:
     ) -> list[SimStage]:
         """Build cycle-simulator stages from the partition.
 
-        ``traces`` assigns memory address streams to the memory operations:
+        ``traces`` assigns memory address streams (**byte** addresses; the
+        kernels touch 32-bit words, hence the ``* 4``) to the memory
+        operations:
 
         * a mapping ``region name -> MemAccess | [MemAccess]`` (one entry
           per memory region, as :func:`repro.core.simulator.stages_from_partition`);
@@ -226,6 +231,11 @@ class SimReport:
 
     def summary(self) -> str:
         df, cv = self.dataflow, self.conventional
+
+        def fmt_stalls(buckets: dict[str, int]) -> str:
+            parts = [f"{k}={v}" for k, v in buckets.items() if v]
+            return "+".join(parts) if parts else "none"
+
         lines = [
             f"simulated {self.n_iters} iterations on memory model "
             f"{self.mem.name!r}:",
@@ -235,7 +245,8 @@ class SimReport:
             f"  ({df.cycles} cycles)",
             f"  speedup              : {self.speedup:8.2f}x",
             "  per-stage stalls     : "
-            + ", ".join(f"{k}={v}" for k, v in df.stage_stall_cycles.items()),
+            + ", ".join(f"{k}[{fmt_stalls(v)}]"
+                        for k, v in df.stage_stall_cycles.items()),
             "",
             f"Fig. 2 occupancy ({self.microbatches} microbatches, "
             f"{self.schedule.num_stages} stages, bubble fraction "
@@ -257,6 +268,128 @@ def simulate_schedule(
 ) -> SimReport:
     mem = mem or acp()
     stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
-    df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth)
-    cv = simulate_conventional([fused_stage(stages)], mem, n_iters)
+    df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth,
+                           seed=seed)
+    cv = simulate_conventional([fused_stage(stages)], mem, n_iters,
+                               seed=seed)
     return SimReport(schedule, stages, df, cv, mem, n_iters, microbatches)
+
+
+# ---------------------------------------------------------------------------
+# The Fig. 5 design-space sweep
+# ---------------------------------------------------------------------------
+
+#: ``mem_in_scc`` axis values: keep the partitioner's analysis, force the
+#: DFS pathology everywhere (what the template degrades to when a memory
+#: access cannot be decoupled), or force it off (perfect decoupling).
+SCC_MODES = ("auto", "forced", "off")
+
+
+def _with_scc_mode(stages: Sequence[SimStage], mode: str) -> list[SimStage]:
+    if mode == "auto":
+        return list(stages)
+    if mode not in SCC_MODES:
+        raise ValueError(f"mem_in_scc mode must be one of {SCC_MODES}, "
+                         f"got {mode!r}")
+    force = mode == "forced"
+    return [dataclasses.replace(st, mem_in_scc=force if st.accesses
+                                else st.mem_in_scc)
+            for st in stages]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Grid of fully-simulated machine comparisons.
+
+    ``rows`` is JSON-ready: one dict per (memory model × fifo depth ×
+    SCC mode) point with dataflow/conventional cycles, cycles/iteration,
+    runtimes, speedup, stall buckets, and cache statistics.
+    """
+
+    rows: list[dict]
+    n_iters: int
+
+    def best(self, metric: str = "dataflow_cycles") -> dict:
+        """The grid point minimizing ``metric``."""
+        return min(self.rows, key=lambda r: r[metric])
+
+    def to_json(self) -> dict:
+        return {"n_iters": self.n_iters, "rows": self.rows}
+
+    def summary(self) -> str:
+        lines = [f"sweep over {len(self.rows)} configurations "
+                 f"({self.n_iters} iterations each):",
+                 f"  {'mem':<10}{'fifo':>5}{'scc':>8}"
+                 f"{'df cyc/it':>11}{'conv cyc/it':>13}{'speedup':>9}"]
+        for r in self.rows:
+            lines.append(
+                f"  {r['mem']:<10}{r['fifo_depth']:>5}"
+                f"{r['mem_in_scc']:>8}"
+                f"{r['dataflow_cpi']:>11.2f}{r['conventional_cpi']:>13.2f}"
+                f"{r['speedup']:>9.2f}")
+        b = self.best()
+        lines.append(f"  best dataflow config: {b['mem']} "
+                     f"fifo={b['fifo_depth']} scc={b['mem_in_scc']} "
+                     f"({b['dataflow_cpi']:.2f} cyc/iter, "
+                     f"{b['speedup']:.2f}x over conventional)")
+        return "\n".join(lines)
+
+
+def sweep_schedule(
+    schedule: Schedule,
+    *,
+    n_iters: int = 1 << 16,
+    mems: Mapping[str, Callable[[], MemoryModel]] | None = None,
+    fifo_depths: Iterable[int] = (8, 32),
+    scc_modes: Iterable[str] = ("auto",),
+    traces: Any = None,
+    seed: int = 0,
+    freq_mhz: float = 150.0,
+    max_outstanding: int | None = None,
+) -> SweepResult:
+    """Grid-run the cycle simulator over memory models (§V: ACP / HP,
+    ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes.
+
+    Every point simulates all ``n_iters`` iterations (no steady-state
+    extrapolation).  The conventional engine has no FIFOs, so its result
+    is shared across depths within a (memory, SCC-mode) pair.
+    """
+    mems = dict(mems) if mems is not None else standard_memory_models()
+    fifo_depths = tuple(fifo_depths)
+    scc_modes = tuple(scc_modes)
+    base_stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    rows: list[dict] = []
+    for mem_name, mk in mems.items():
+        # the conventional engine has no FIFOs and resolves every access
+        # regardless of SCC classification: one simulation per memory
+        # model, shared across both grid axes
+        conv_mem = mk()
+        if max_outstanding is not None:
+            conv_mem.max_outstanding = max_outstanding
+        cv = simulate_conventional([fused_stage(base_stages)], conv_mem,
+                                   n_iters, freq_mhz=freq_mhz, seed=seed)
+        for mode in scc_modes:
+            stages = _with_scc_mode(base_stages, mode)
+            for depth in fifo_depths:
+                mem = mk()
+                if max_outstanding is not None:
+                    mem.max_outstanding = max_outstanding
+                df = simulate_dataflow(stages, mem, n_iters,
+                                       fifo_depth=depth,
+                                       freq_mhz=freq_mhz, seed=seed)
+                rows.append({
+                    "mem": mem_name,
+                    "fifo_depth": depth,
+                    "mem_in_scc": mode,
+                    "dataflow_cycles": df.cycles,
+                    "conventional_cycles": cv.cycles,
+                    "dataflow_cpi": df.cycles_per_iter,
+                    "conventional_cpi": cv.cycles_per_iter,
+                    "dataflow_s": df.runtime_s,
+                    "conventional_s": cv.runtime_s,
+                    "speedup": cv.cycles / max(1, df.cycles),
+                    "dataflow_stalls": df.total_stalls(),
+                    "cache_hits": df.cache_hits,
+                    "cache_misses": df.cache_misses,
+                })
+    return SweepResult(rows, n_iters)

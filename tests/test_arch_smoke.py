@@ -8,6 +8,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, load_config, reduced
+
+_HEAVY_ARCHS = {"deepseek-v3-671b", "jamba-1.5-large-398b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+               if a in _HEAVY_ARCHS else a for a in ARCH_IDS]
 from repro.models import (decode_step, forward, init_cache, init_params,
                           input_specs, loss_fn, prefill)
 
@@ -40,7 +44,7 @@ def arch_setup():
     return get
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_shapes_and_finite(arch, arch_setup):
     cfg, params, rng = arch_setup(arch)
     batch = _batch(cfg, rng)
@@ -53,7 +57,7 @@ def test_forward_shapes_and_finite(arch, arch_setup):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_loss_finite_and_grads(arch, arch_setup):
     cfg, params, rng = arch_setup(arch)
     batch = _batch(cfg, rng)
@@ -68,7 +72,7 @@ def test_train_step_loss_finite_and_grads(arch, arch_setup):
                for g in leaves), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_step_runs(arch, arch_setup):
     cfg, params, rng = arch_setup(arch)
     cache = init_cache(cfg, _B, max_len=_S + 8)
@@ -107,7 +111,7 @@ def test_prefill_then_decode_matches_forward(arch, arch_setup):
                                rtol=2e-3, atol=2e-3)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_input_specs_all_shapes(arch):
     from repro.configs import SHAPES, cell_is_applicable
     cfg = load_config(arch)

@@ -49,6 +49,7 @@ def test_backend_parity_on_quickstart_kernel():
         np.testing.assert_allclose(got, ref, rtol=1e-6, err_msg=name)
 
 
+@pytest.mark.slow
 def test_all_backends_including_systolic_subprocess():
     """With forced host devices every registered execute backend runs and
     matches the direct call (the quickstart acceptance check)."""
@@ -91,6 +92,50 @@ def test_simulate_backend_returns_report():
     assert rep.dataflow.cycles > 0
     assert rep.conventional.cycles >= rep.dataflow.cycles
     assert "Fig. 2" in rep.summary()
+
+
+def test_compiled_sweep_grid():
+    """Compiled.sweep: the design-space grid over memory models × FIFO
+    depths × SCC modes, dispatched through the simulate backend."""
+    import json
+
+    table, idx, w = _example()
+    c = dcompile(_quickstart_kernel, table, idx, w)
+    res = c.sweep(n_iters=1500, fifo_depths=(4, 16),
+                  scc_modes=("auto", "forced"))
+    # 4 memory models x 2 depths x 2 modes
+    assert len(res.rows) == 16
+    assert {r["mem"] for r in res.rows} == {"ACP", "ACP+64KB", "HP",
+                                            "HP+64KB"}
+    for r in res.rows:
+        assert r["dataflow_cycles"] > 0
+        assert r["speedup"] == r["conventional_cycles"] / r["dataflow_cycles"]
+    # the grid is JSON-ready (the BENCH_sim.json contract)
+    json.dumps(res.to_json())
+    best = res.best()
+    assert best["dataflow_cycles"] == min(r["dataflow_cycles"]
+                                          for r in res.rows)
+    assert "best dataflow config" in res.summary()
+    # forcing the DFS pathology can never make the pipeline faster
+    for mem in ("ACP", "HP"):
+        auto = [r for r in res.rows if r["mem"] == mem
+                and r["mem_in_scc"] == "auto" and r["fifo_depth"] == 16]
+        forced = [r for r in res.rows if r["mem"] == mem
+                  and r["mem_in_scc"] == "forced" and r["fifo_depth"] == 16]
+        assert forced[0]["dataflow_cycles"] >= auto[0]["dataflow_cycles"]
+
+
+def test_sweep_conventional_shared_across_depths():
+    """The conventional engine has no FIFOs: one simulation per
+    (memory, SCC mode) is reused across the depth axis."""
+    table, idx, w = _example()
+    c = dcompile(_quickstart_kernel, table, idx, w)
+    res = c.sweep(n_iters=800, fifo_depths=(2, 8, 32))
+    by_mem: dict = {}
+    for r in res.rows:
+        by_mem.setdefault(r["mem"], set()).add(r["conventional_cycles"])
+    for mem, cycles in by_mem.items():
+        assert len(cycles) == 1, (mem, cycles)
 
 
 def test_stream_matches_per_microbatch_calls():

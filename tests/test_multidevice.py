@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 8 forced host devices
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

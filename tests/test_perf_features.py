@@ -15,6 +15,7 @@ from repro.models import attention, decode_step, forward, init_cache, \
 from repro.models import moe as moe_mod
 
 
+@pytest.mark.slow
 def test_mla_absorbed_matches_naive():
     """Absorbed MLA decode is the same linear algebra reassociated —
     results must match the naive decompress-and-attend path closely."""
@@ -58,6 +59,7 @@ def test_int8_kv_cache_close_to_bf16():
     assert float(agree) == 1.0
 
 
+@pytest.mark.slow
 def test_int8_dispatch_close_to_bf16():
     cfg = reduced(load_config("llama4-scout-17b-a16e"), max_repeats=1)
     m8 = dataclasses.replace(cfg.moe, dispatch_dtype="int8",

@@ -28,6 +28,7 @@ def _toy_params(seed=0):
     }
 
 
+@pytest.mark.slow
 def test_adamw_converges_on_quadratic():
     cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip_norm=1e9)
     params = _toy_params()
@@ -98,6 +99,7 @@ def test_int8_quant_roundtrip_error_bound(n, seed):
     assert (err <= bound + 1e-6).all()
 
 
+@pytest.mark.slow
 def test_compressed_psum_multidevice():
     import subprocess, sys, textwrap
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -219,6 +221,7 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
 # Fault tolerance end-to-end (train loop with injected failure)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_recovers_from_injected_failure(tmp_path):
     from repro.configs import load_config, reduced
     from repro.launch.train import train_loop
@@ -236,6 +239,7 @@ def test_train_recovers_from_injected_failure(tmp_path):
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_train_resume_matches_uninterrupted(tmp_path):
     """Kill after 8 steps, restart to 12 — identical final loss to a
     single 12-step run (deterministic data + bitwise state restore)."""

@@ -67,6 +67,7 @@ def test_partitioner_collapses_dfs_to_one_stage():
 # Training end-to-end
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path):
     from repro.configs import load_config, reduced
     from repro.launch.train import train_loop
@@ -104,6 +105,7 @@ def test_serve_batched_deterministic():
 # Dry-run: one full cell in a 512-device subprocess
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_dryrun_cell_compiles():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
