@@ -1,0 +1,140 @@
+"""Perf-trajectory trend gate: compare BENCH_sim.json against the
+previous CI run's artifact and FAIL on regressions, instead of merely
+uploading the file and hoping someone looks.
+
+Gates (tolerances chosen so container noise passes but real regressions
+do not):
+
+* **cycle counts** — any sweep grid point or fig5 cell whose
+  dataflow/conventional cycle count *increased* by more than 10 % vs the
+  previous run fails (cycle counts are deterministic given the seed, so
+  a drift means the model changed; deliberate modeling changes ship with
+  a regenerated baseline artifact in the same PR, which resets the
+  comparison).  Decreases are reported as improvements.
+* **wall clock** — the sweep's wall time and the vectorized engine's
+  iters/s throughput may regress at most 2× (generous: CI containers
+  are noisy, a real algorithmic regression is way past 2×).
+
+Rows are matched on their full grid coordinates; points present on only
+one side (grid grew or shrank) are skipped with a note.  A missing
+previous artifact passes — the first run has nothing to compare against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+CYCLE_TOL = 1.10     # >10% cycle-count growth fails
+WALL_TOL = 2.0       # >2x wall-clock growth fails
+WALL_FLOOR_S = 30.0  # don't gate walls this short: runner noise 2x's them
+
+
+def _sweep_key(row: dict) -> tuple:
+    return (row.get("kernel"), row.get("mem"), row.get("fifo_depth"),
+            row.get("mem_in_scc"), row.get("words_per_cycle"),
+            row.get("max_outstanding"), row.get("n_iters"))
+
+
+def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
+    """(failures, notes) between two BENCH_sim.json payloads."""
+    failures: list[str] = []
+    notes: list[str] = []
+
+    # --- sweep cycle counts -------------------------------------------------
+    ps, cs = prev.get("sweep"), cur.get("sweep")
+    if ps and cs and ps.get("smoke") == cs.get("smoke"):
+        prows = {_sweep_key(r): r for r in ps.get("rows", [])}
+        matched = 0
+        for r in cs.get("rows", []):
+            p = prows.get(_sweep_key(r))
+            if p is None:
+                continue
+            matched += 1
+            for field in ("dataflow_cycles", "conventional_cycles"):
+                if field in p and p[field] and field in r:
+                    ratio = r[field] / p[field]
+                    if ratio > CYCLE_TOL:
+                        failures.append(
+                            f"sweep {_sweep_key(r)} {field}: "
+                            f"{p[field]} -> {r[field]} (+{ratio - 1:.1%})")
+                    elif ratio < 1 / CYCLE_TOL:
+                        notes.append(
+                            f"sweep {_sweep_key(r)} {field} improved "
+                            f"{1 - ratio:.1%}")
+        notes.append(f"sweep: {matched} matched grid points")
+        pw, cw = ps.get("wall_s"), cs.get("wall_s")
+        if pw and cw and pw >= WALL_FLOOR_S and cw / pw > WALL_TOL:
+            failures.append(f"sweep wall_s: {pw:.1f} -> {cw:.1f} "
+                            f"({cw / pw:.1f}x)")
+    elif ps and cs:
+        notes.append("sweep: smoke/full mismatch, skipped")
+
+    # --- fig5 cycle counts --------------------------------------------------
+    pf, cf = prev.get("fig5"), cur.get("fig5")
+    if pf and cf:
+        for kn, cr in cf.get("results", {}).items():
+            pr = pf.get("results", {}).get(kn)
+            if not pr or pr.get("n_iters_simulated") != \
+                    cr.get("n_iters_simulated"):
+                continue
+            for mem, cell in cr.items():
+                if not isinstance(cell, dict) or mem not in pr:
+                    continue
+                for field in ("dataflow_cycles", "conventional_cycles"):
+                    pv, cv = pr[mem].get(field), cell.get(field)
+                    if pv and cv and cv / pv > CYCLE_TOL:
+                        failures.append(
+                            f"fig5 {kn}/{mem} {field}: {pv} -> {cv} "
+                            f"(+{cv / pv - 1:.1%})")
+
+    # --- vectorized-engine throughput --------------------------------------
+    # gate on the reference-vs-vectorized *speedup ratio* rather than raw
+    # iters/s: both numerator and denominator see the same runner noise,
+    # so the ratio is stable where a 40 ms absolute timing is not
+    pp, cp = prev.get("perf"), cur.get("perf")
+    if pp and cp and pp.get("n_iters") == cp.get("n_iters"):
+        for mem in ("ACP",):
+            pv = pp.get(mem, {}).get("dataflow_speedup")
+            cv = cp.get(mem, {}).get("dataflow_speedup")
+            if pv and cv and pv / cv > WALL_TOL:
+                failures.append(
+                    f"perf {mem} dataflow vectorized-vs-reference "
+                    f"speedup: {pv:.0f}x -> {cv:.0f}x "
+                    f"({pv / cv:.1f}x worse)")
+
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--previous", default="prev/BENCH_sim.json")
+    ap.add_argument("--current", default="BENCH_sim.json")
+    a = ap.parse_args()
+    if not os.path.exists(a.current):
+        print(f"trend gate: no current {a.current}; nothing to check")
+        return 0
+    if not os.path.exists(a.previous):
+        print(f"trend gate: no previous artifact at {a.previous} "
+              f"(first run?) — passing")
+        return 0
+    with open(a.previous) as f:
+        prev = json.load(f)
+    with open(a.current) as f:
+        cur = json.load(f)
+    failures, notes = compare(prev, cur)
+    for n in notes:
+        print(f"  note: {n}")
+    if failures:
+        print(f"trend gate: {len(failures)} regression(s) vs previous run:")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    print("trend gate: no regressions vs previous run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

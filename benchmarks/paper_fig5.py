@@ -19,9 +19,18 @@ Checked claims (§V-A):
   * HP (uncached) degrades conventional vs ACP (~40 %);
   * DFS shows no meaningful dataflow gain (memory SCC).
 
-Full-size runs are heavy (≈10⁹ iterations for Floyd–Warshall); the
-independent (kernel × machine × memory) simulations are farmed out to a
-small process pool (``--jobs``).
+The grid is planned so cells sharing work run together: per kernel, ONE
+task simulates the dataflow machine on all four memory configs at once
+(windows, burst masks, and each cache geometry resolved a single time —
+see ``simulate_dataflow_many``), one task covers the conventional engine
+on all four, and one the processor baseline.  Tasks are farmed longest-
+first to a small process pool (``--jobs``), and resolved traces are
+memoized on disk (``experiments/.rescache``) so repeated runs and the
+sweep harness share work; ``--no-rescache`` forces cold resolution.
+The PR 2 layout re-resolved every (kernel × machine × memory) cell from
+scratch — ~1.5 h on 2 cores for this grid; the shared-resolution planner
+plus the vectorized N-way LRU and the fast-path wavefront bring full
+regeneration down to minutes (recorded in ``BENCH_sim.json``).
 """
 
 from __future__ import annotations
@@ -29,12 +38,15 @@ from __future__ import annotations
 import argparse
 import json
 import multiprocessing
+import os
 import time
 
 import numpy as np
 
-from repro.core.simulator import (simulate_conventional, simulate_dataflow,
-                                  simulate_processor, standard_memory_models)
+from repro.core.simulator import (simulate_conventional_many,
+                                  simulate_dataflow_many,
+                                  simulate_processor,
+                                  standard_memory_models)
 from repro.dataflow import compile as dataflow_compile, fused_stage
 from .paper_kernels import ALL_KERNELS, PaperKernel
 
@@ -47,6 +59,20 @@ SPMV_SCALE = 0.125  # correctness-data scale; traces are full-size anyway
 #: the pipeline and the whole run degrades to lockstep backpressure.
 FIFO_DEPTH = 256
 MAX_OUTSTANDING = 16  # the paper's "multiple outstanding requests"
+
+#: Measured PR 2 baseline for full regeneration of this grid (per-cell
+#: timings extrapolated to Table-I iteration counts on the CI container;
+#: ROADMAP recorded "~1.5 h on 2 cores" for the same run).
+PR2_BASELINE_CPU_S = 10594.0
+
+
+def _dataflow_mems() -> dict:
+    mems = {}
+    for mn, mk in standard_memory_models().items():
+        m = mk()
+        m.max_outstanding = MAX_OUTSTANDING
+        mems[mn] = m
+    return mems
 
 
 def build_stages(k: PaperKernel, *, full: bool = True):
@@ -87,12 +113,15 @@ def run_kernel(k: PaperKernel, *, full: bool = False) -> dict:
                  "n_iters_full": k.n_iters_full,
                  "fully_simulated": bool(full),
                  "baseline_s": t_base}
-    mems = standard_memory_models()
-    for name, mk in mems.items():
-        mem = mk()
-        mem.max_outstanding = MAX_OUTSTANDING
-        df = simulate_dataflow(df_stages, mem, n, fifo_depth=FIFO_DEPTH)
-        cv = simulate_conventional(conv_stages, mk(), n)
+    dfs = simulate_dataflow_many(df_stages, _dataflow_mems(), n,
+                                 fifo_depths=(FIFO_DEPTH,),
+                                 collect_stalls=False)
+    cvs = simulate_conventional_many(
+        conv_stages, {mn: mk() for mn, mk in
+                      standard_memory_models().items()}, n)
+    for name in MEM_NAMES:
+        df = dfs[(name, FIFO_DEPTH)]
+        cv = cvs[name]
         t_df = df.runtime_s if full else df.scaled_runtime(k.n_iters_full)
         t_cv = cv.runtime_s if full else cv.scaled_runtime(k.n_iters_full)
         out[name] = {
@@ -106,51 +135,71 @@ def run_kernel(k: PaperKernel, *, full: bool = False) -> dict:
 
 
 def _sim_task(task: tuple) -> tuple:
-    """One (kernel, machine, memory-config) simulation — a top-level
-    function so a spawn-based process pool can run the grid."""
-    kname, what, mem_name, full = task
+    """One (kernel, machine) group: all four memory configs resolved in a
+    single shared pass — a top-level function so a spawn-based process
+    pool can run the grid."""
+    kname, what, full = task
     t0 = time.perf_counter()
     k = _make_kernel(kname)
     n = k.n_iters_full if full else k.n_iters_sim
     traces = k.full_traces if full else k.traces
     if what == "processor":
-        r = simulate_processor(k.instrs_per_iter, list(traces.values()), n)
+        r = {"": simulate_processor(k.instrs_per_iter,
+                                    list(traces.values()), n)}
+    elif what == "dataflow":
+        df_stages, _ = build_stages(k, full=full)
+        grid = simulate_dataflow_many(df_stages, _dataflow_mems(), n,
+                                      fifo_depths=(FIFO_DEPTH,),
+                                      collect_stalls=False)
+        r = {mn: grid[(mn, FIFO_DEPTH)] for mn in MEM_NAMES}
     else:
-        df_stages, conv_stages = build_stages(k, full=full)
-        mem = standard_memory_models()[mem_name]()
-        mem.max_outstanding = MAX_OUTSTANDING
-        if what == "dataflow":
-            r = simulate_dataflow(df_stages, mem, n, fifo_depth=FIFO_DEPTH)
-        else:
-            r = simulate_conventional(conv_stages, mem, n)
-    return kname, what, mem_name, r, time.perf_counter() - t0
+        _, conv_stages = build_stages(k, full=full)
+        r = simulate_conventional_many(
+            conv_stages, {mn: mk() for mn, mk in
+                          standard_memory_models().items()}, n)
+    return kname, what, r, time.perf_counter() - t0
+
+
+#: Rough relative cost of a machine group, for longest-first scheduling.
+_MACHINE_WEIGHT = {"dataflow": 3.0, "conventional": 1.2, "processor": 1.0}
 
 
 def run_all(*, full: bool = True, jobs: int | None = None,
-            kernels: tuple[str, ...] | None = None) -> dict:
+            kernels: tuple[str, ...] | None = None,
+            ) -> tuple[dict, dict, int]:
+    """The full grid; returns (per-kernel results, per-task seconds,
+    resolved worker count)."""
     kernels = tuple(kernels or ALL_KERNELS)
-    tasks = [(kn, "processor", "", full) for kn in kernels]
-    tasks += [(kn, what, mn, full) for kn in kernels
-              for mn in MEM_NAMES for what in ("dataflow", "conventional")]
+    tasks = [(kn, what, full) for kn in kernels
+             for what in ("dataflow", "conventional", "processor")]
+    tasks.sort(key=lambda t: -(_make_kernel(t[0]).n_iters_full if full
+                               else 1) * _MACHINE_WEIGHT[t[1]])
     if jobs is None:
-        jobs = min(2, multiprocessing.cpu_count())
+        # one extra worker over the core count: the three Floyd–Warshall
+        # machine groups are near-equal, so exact 2-way packing wastes a
+        # core for the whole tail — oversubscription lets the scheduler
+        # interleave them and the wall approaches total-CPU / cores
+        jobs = min(multiprocessing.cpu_count() + 1, 4) if full \
+            else min(2, multiprocessing.cpu_count())
     sims: dict[tuple, object] = {}
+    task_s: dict[str, float] = {}
     pool = (multiprocessing.get_context("spawn").Pool(jobs)
             if jobs > 1 else None)
     try:
         results = (pool.imap_unordered(_sim_task, tasks) if pool
                    else map(_sim_task, tasks))
-        for kn, what, mn, r, dt in results:
-            sims[(kn, what, mn)] = r
-            print(f"  [{kn}] {what:<12} {mn:<9} "
-                  f"{r.cycles_per_iter:8.2f} cyc/iter  ({dt:.1f}s)",
-                  flush=True)
+        for kn, what, group, dt in results:
+            for mn, r in group.items():
+                sims[(kn, what, mn)] = r
+            task_s[f"{kn}/{what}"] = dt
+            print(f"  [{kn}] {what:<12} all-mems "
+                  f"({dt:.1f}s)", flush=True)
     finally:
         if pool is not None:
             pool.close()
             pool.join()
 
-    results: dict[str, dict] = {}
+    results_out: dict[str, dict] = {}
     for kn in kernels:
         k = _make_kernel(kn)
         n = k.n_iters_full if full else k.n_iters_sim
@@ -178,8 +227,8 @@ def run_all(*, full: bool = True, jobs: int | None = None,
                 "conventional_vs_baseline": t_base / t_cv,
                 "dataflow_vs_conventional": t_cv / t_df,
             }
-        results[kn] = out
-    return results
+        results_out[kn] = out
+    return results_out, task_s, jobs
 
 
 def summarize(results: dict) -> dict:
@@ -215,14 +264,37 @@ def summarize(results: dict) -> dict:
     return summary
 
 
+def _rescache_disk_stats() -> dict:
+    """Artifact count/bytes in the on-disk store (the workers of a spawn
+    pool write there; the parent's in-process stats stay empty)."""
+    from repro.core import rescache as _rc
+    d = _rc._dir()
+    try:
+        files = os.listdir(d) if d and os.path.isdir(d) else []
+        return {"dir": d, "artifacts": len(files),
+                "bytes": sum(os.path.getsize(os.path.join(d, f))
+                             for f in files)}
+    except OSError:
+        return {"dir": d, "artifacts": 0, "bytes": 0}
+
+
 def main(out_path: str | None = "experiments/paper_fig5.json",
          *, quick: bool = False, jobs: int | None = None,
-         kernels: tuple[str, ...] | None = None) -> dict:
+         kernels: tuple[str, ...] | None = None,
+         rescache: bool = True) -> dict:
+    if not rescache:
+        # spawn-pool workers inherit the environment, not configure()
+        os.environ["REPRO_RESCACHE"] = "0"
+        from repro.core import rescache as _rc
+        _rc.configure(enabled=False)
     full = not quick
     mode = ("fully simulated (Table-I iteration counts)" if full
             else "extrapolated from a small window (--quick)")
     print(f"Fig. 5 grid — {mode}")
-    results = run_all(full=full, jobs=jobs, kernels=kernels)
+    t0 = time.perf_counter()
+    results, task_s, jobs_used = run_all(full=full, jobs=jobs,
+                                         kernels=kernels)
+    wall_s = time.perf_counter() - t0
     summary = summarize(results)
     print(f"\n{'kernel':<16}{'mem':<10}{'conv/base':>10}{'df/base':>10}"
           f"{'df/conv':>10}")
@@ -232,21 +304,33 @@ def main(out_path: str | None = "experiments/paper_fig5.json",
                   f"{r[m]['conventional_vs_baseline']:>10.2f}"
                   f"{r[m]['dataflow_vs_baseline']:>10.2f}"
                   f"{r[m]['dataflow_vs_conventional']:>10.2f}")
-    print("\nsummary:", json.dumps(summary, indent=1))
+    print(f"\nwall-clock: {wall_s:.1f}s")
+    print("summary:", json.dumps(summary, indent=1))
     if out_path:
-        import os
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
         with open(out_path, "w") as f:
             json.dump({"results": results, "summary": summary}, f,
                       indent=1, default=float)
-    if full:
+    if full and (kernels is None or set(kernels) == set(ALL_KERNELS)):
         # perf trajectory: fig5 grid + vectorized-vs-reference timings
-        # (--quick is a dev loop; only real runs update BENCH_sim.json)
+        # (--quick is a dev loop; only real full runs update BENCH)
+        from repro.core import rescache as _rc
         from .sweep import measure_perf, update_bench
         update_bench("fig5", {"fully_simulated": True, "results": results,
                               "summary": summary})
+        update_bench("fig5_wallclock", {
+            "wall_s": wall_s,
+            "jobs": jobs_used,
+            "task_s": task_s,
+            "rescache": rescache,
+            "rescache_stats": _rc.stats(),  # parent process; workers own
+            "rescache_disk": _rescache_disk_stats(),
+            "pr2_baseline_cpu_s": PR2_BASELINE_CPU_S,
+            "pr2_baseline_wall_2core_s": PR2_BASELINE_CPU_S / 2,
+            "speedup_vs_pr2_wall": (PR2_BASELINE_CPU_S / 2) / wall_s,
+        })
         update_bench("perf", measure_perf())
-    return {"results": results, "summary": summary}
+    return {"results": results, "summary": summary, "wall_s": wall_s}
 
 
 def cli() -> dict:
@@ -256,12 +340,18 @@ def cli() -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small-window extrapolated mode (development)")
+    ap.add_argument("--full", action="store_true",
+                    help="full Table-I simulation (the default; kept as "
+                         "an explicit flag for scripts)")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--kernels", nargs="*", default=None)
     ap.add_argument("--out", default="experiments/paper_fig5.json")
+    ap.add_argument("--no-rescache", action="store_true",
+                    help="bypass the resolved-trace cache (cold timings)")
     a, _ = ap.parse_known_args()
     return main(a.out, quick=a.quick, jobs=a.jobs,
-                kernels=tuple(a.kernels) if a.kernels else None)
+                kernels=tuple(a.kernels) if a.kernels else None,
+                rescache=not a.no_rescache)
 
 
 if __name__ == "__main__":

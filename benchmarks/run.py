@@ -4,8 +4,16 @@
             (conventional vs dataflow vs ARM baseline; writes
             experiments/paper_fig5.json + BENCH_sim.json)
   sweep   — Fig. 5 design-space sweep (kernels × memory models × FIFO
-            depths × SCC modes; ``--smoke`` after the section name for
-            the reduced CI grid, e.g. ``run.py sweep --smoke``)
+            depths × SCC modes × port knobs; ``--smoke`` after the
+            section name for the reduced CI grid, e.g.
+            ``run.py sweep --smoke``)
+
+Both fig5 and sweep memoize resolved traces under
+``experiments/.rescache`` (in-process LRU + on-disk store shared across
+grid cells, chunk sizes, and worker processes).  Pass ``--no-rescache``
+after the section name to force cold resolution — e.g.
+``run.py fig5 --no-rescache`` — for timing runs or when a trace
+generator changed without changing its fingerprinted sample.
   table2  — Table II analogue (stage/channel/duplication accounting)
   kernels — Pallas-kernel micro-bench CSV (name,us_per_call,derived)
   roofline— the (arch × shape) table from dry-run artifacts (if present)

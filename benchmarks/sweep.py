@@ -105,8 +105,15 @@ def measure_perf(n: int = 65536) -> dict:
 
 
 def _sweep_task(task: tuple) -> list[dict]:
-    """Sweep one kernel over one memory model (top-level for spawn)."""
-    kname, mem_name, fifo_depths, scc_modes, n_iters = task
+    """Sweep one kernel over one memory model (top-level for spawn).
+
+    Within the task the planner in ``sweep_schedule`` shares all trace
+    resolution across FIFO depths / SCC modes / port-knob variants (one
+    streaming pass per SCC mode), and the resolved traces are memoized
+    on disk so tasks in sibling processes — and later ``paper_fig5``
+    runs — share with this one."""
+    (kname, mem_name, fifo_depths, scc_modes, n_iters,
+     wpcs, mos) = task
     k = _make_kernel(kname)
     n = n_iters or k.n_iters_full
     traces = k.full_traces if n_iters is None else k.traces
@@ -117,7 +124,8 @@ def _sweep_task(task: tuple) -> list[dict]:
     res = compiled.sweep(n_iters=n, mems=mems,
                          fifo_depths=fifo_depths, scc_modes=scc_modes,
                          traces=list(traces.values()),
-                         max_outstanding=MAX_OUTSTANDING)
+                         max_outstanding=MAX_OUTSTANDING,
+                         words_per_cycle=wpcs, max_outstandings=mos)
     for row in res.rows:
         row["kernel"] = kname
         row["n_iters"] = n
@@ -127,17 +135,28 @@ def _sweep_task(task: tuple) -> list[dict]:
 
 def run_sweep(*, smoke: bool = False, jobs: int | None = None,
               kernels: tuple[str, ...] | None = None,
-              out_path: str = BENCH_PATH) -> dict:
+              out_path: str = BENCH_PATH,
+              words_per_cycle: tuple[float, ...] | None = None,
+              max_outstandings: tuple[int, ...] | None = None,
+              rescache: bool = True) -> dict:
     from .paper_kernels import ALL_KERNELS
+    if not rescache:
+        os.environ["REPRO_RESCACHE"] = "0"  # spawn workers inherit env
+        from repro.core import rescache as _rc
+        _rc.configure(enabled=False)
     kernels = tuple(kernels or ALL_KERNELS)
     if smoke:
         kernels = kernels[:2]
         mems = ("ACP", "ACP+64KB")
         fifo_depths, scc_modes, n_iters = (8,), ("auto",), SMOKE_ITERS
+        if words_per_cycle is None:
+            # exercise the port-knob axes + Pareto view in CI
+            words_per_cycle = (0.5, 1.0)
     else:
         mems = tuple(standard_memory_models())
         fifo_depths, scc_modes, n_iters = FIFO_DEPTHS, SCC_MODES, None
-    tasks = [(kn, mn, fifo_depths, scc_modes, n_iters)
+    tasks = [(kn, mn, fifo_depths, scc_modes, n_iters,
+              words_per_cycle, max_outstandings)
              for kn in kernels for mn in mems]
     if jobs is None:
         jobs = 1 if smoke else min(2, multiprocessing.cpu_count())
@@ -158,16 +177,32 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
             pool.close()
             pool.join()
     rows.sort(key=lambda r: (r["kernel"], r["mem"], r["fifo_depth"],
-                             r["mem_in_scc"]))
+                             r["mem_in_scc"], r["words_per_cycle"],
+                             r["max_outstanding"]))
+    # per-kernel cycles-vs-FIFO-bits Pareto fronts (HIDA-style DSE view,
+    # the same dominance rule as Compiled.sweep via SweepResult.pareto)
+    from repro.dataflow.schedule import SweepResult
+    fronts: dict[str, list] = {}
+    for kn in kernels:
+        krows = [r for r in rows if r["kernel"] == kn]
+        front = SweepResult(krows, krows[0]["n_iters"]).pareto()
+        fronts[kn] = [
+            {"mem": r["mem"], "fifo_depth": r["fifo_depth"],
+             "fifo_bits": r["fifo_bits"],
+             "words_per_cycle": r["words_per_cycle"],
+             "max_outstanding": r["max_outstanding"],
+             "dataflow_cycles": r["dataflow_cycles"]}
+            for r in front]
     perf = measure_perf()
     payload = {"smoke": smoke, "wall_s": time.perf_counter() - t0,
-               "rows": rows}
+               "rows": rows, "pareto": fronts}
     update_bench("sweep", payload, out_path)
     update_bench("perf", perf, out_path)
-    print(f"\n{'kernel':<16}{'mem':<10}{'fifo':>5}{'df cyc/it':>11}"
-          f"{'conv cyc/it':>13}{'speedup':>9}")
+    print(f"\n{'kernel':<16}{'mem':<10}{'fifo':>5}{'wpc':>5}{'mo':>4}"
+          f"{'df cyc/it':>11}{'conv cyc/it':>13}{'speedup':>9}")
     for r in rows:
         print(f"{r['kernel']:<16}{r['mem']:<10}{r['fifo_depth']:>5}"
+              f"{r['words_per_cycle']:>5.2g}{r['max_outstanding']:>4}"
               f"{r['dataflow_cpi']:>11.2f}{r['conventional_cpi']:>13.2f}"
               f"{r['speedup']:>9.2f}")
     print(f"\nsimulator perf: dataflow {perf['ACP']['dataflow_speedup']:.0f}x"
@@ -184,10 +219,21 @@ def main() -> dict:
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--kernels", nargs="*", default=None)
     ap.add_argument("--out", default=BENCH_PATH)
+    ap.add_argument("--words-per-cycle", nargs="*", type=float,
+                    default=None, help="port bandwidth axis values")
+    ap.add_argument("--max-outstandings", nargs="*", type=int,
+                    default=None, help="in-flight request cap axis values")
+    ap.add_argument("--no-rescache", action="store_true",
+                    help="bypass the resolved-trace cache (cold timings)")
     a, _ = ap.parse_known_args()
     return run_sweep(smoke=a.smoke, jobs=a.jobs,
                      kernels=tuple(a.kernels) if a.kernels else None,
-                     out_path=a.out)
+                     out_path=a.out,
+                     words_per_cycle=(tuple(a.words_per_cycle)
+                                      if a.words_per_cycle else None),
+                     max_outstandings=(tuple(a.max_outstandings)
+                                       if a.max_outstandings else None),
+                     rescache=not a.no_rescache)
 
 
 if __name__ == "__main__":

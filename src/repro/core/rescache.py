@@ -1,0 +1,442 @@
+"""Memoized trace resolution: the content-addressed ``ResolvedTrace`` store.
+
+Resolving an address trace against a memory model — cache replay,
+backing-store draws, folding into per-stage ``(c, lat_add)`` arrays — is
+the expensive half of the cycle simulator, and it is *identical* across
+every sweep cell that shares a ``(trace, memory model, seed)`` triple:
+FIFO depths, chunk sizes, and host processes only change the cheap
+wavefront solve.  This module caches that resolution product:
+
+* **in process** — a byte-capped LRU of :class:`ResolvedTrace` artifacts,
+  shared by every simulation in the interpreter (``paper_fig5``,
+  ``sweep``, ``Compiled.sweep`` cells alike);
+* **on disk** — an atomic store under ``experiments/.rescache/`` (or
+  ``$REPRO_RESCACHE_DIR``) so spawn-based process pools and repeated
+  benchmark runs share work; corrupt or concurrent writes degrade to a
+  cache miss, never an error.
+
+The cache key is a blake2b digest of
+
+* the **trace fingerprints** — full content for materialized arrays up
+  to :data:`FULL_HASH_MAX` addresses, and a deterministic sample of
+  windows plus the length for window-generated traces (``gen`` must be
+  pure in ``(lo, hi)``, which the :class:`~repro.core.simulator.MemAccess`
+  contract already requires);
+* the **stage signature** — per stage ``(ii, mem_in_scc)`` plus each
+  access's ``(fingerprint, is_store)``.  Stage *latency* is deliberately
+  excluded: it shifts finish times in the solver but never the resolved
+  arrays;
+* the **memory model** — every numeric field (latencies, hit rate,
+  bandwidth, outstanding cap, posted-write flag, line size, full cache
+  geometry including ``write_allocate``).  The model's *name* is
+  excluded: two differently-named but identical models share;
+* the **seed** and **iteration count**.  The chunk size is excluded —
+  resolution is chunk-invariant (asserted by the streaming tests).
+
+Results served from the cache are bit-identical to a fresh resolution;
+disable with ``REPRO_RESCACHE=0``, ``configure(enabled=False)``, or the
+benchmarks' ``--no-rescache`` flag.  Artifacts whose raw size exceeds
+:func:`configure`'s ``artifact_mb`` (Floyd–Warshall's 10⁹-iteration
+grid) are never stored — those runs still share resolution *within* a
+process through :func:`~repro.core.simulator.simulate_dataflow_many`'s
+lanes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from typing import Any, Sequence
+from zipfile import BadZipFile as _BadZipFile
+
+import numpy as np
+
+from .simulator import MemAccess, MemoryModel, SimStage, _ResolvedChunk
+
+#: Materialized traces up to this many addresses are fingerprinted by
+#: full content; longer or generated traces by deterministic sampling.
+FULL_HASH_MAX = 1 << 22
+
+#: Number × size of sampled windows for long/generated traces.
+SAMPLE_WINDOWS = 16
+SAMPLE_LEN = 4096
+
+_KEY_VERSION = "rescache-v1"
+
+
+@dataclasses.dataclass
+class _Config:
+    enabled: bool = os.environ.get("REPRO_RESCACHE", "1") != "0"
+    directory: str | None = os.environ.get("REPRO_RESCACHE_DIR")
+    memory_mb: int = int(os.environ.get("REPRO_RESCACHE_MEM_MB", "256"))
+    artifact_mb: int = int(os.environ.get("REPRO_RESCACHE_ART_MB", "256"))
+    disk_mb: int = int(os.environ.get("REPRO_RESCACHE_DISK_MB", "2048"))
+
+
+_cfg = _Config()
+_mem: "OrderedDict[str, ResolvedTrace]" = OrderedDict()
+_mem_bytes = 0
+_summaries: "OrderedDict[str, dict]" = OrderedDict()
+_stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "stores": 0,
+          "too_large": 0, "disk_errors": 0}
+
+
+def configure(*, enabled: bool | None = None, directory: str | None = None,
+              memory_mb: int | None = None, artifact_mb: int | None = None,
+              disk_mb: int | None = None) -> None:
+    """Adjust the cache at runtime (tests, benchmark flags)."""
+    if enabled is not None:
+        _cfg.enabled = enabled
+    if directory is not None:
+        _cfg.directory = directory
+    if memory_mb is not None:
+        _cfg.memory_mb = memory_mb
+    if artifact_mb is not None:
+        _cfg.artifact_mb = artifact_mb
+    if disk_mb is not None:
+        _cfg.disk_mb = disk_mb
+
+
+def enabled(override: bool | None = None) -> bool:
+    return _cfg.enabled if override is None else override
+
+
+def stats() -> dict[str, int]:
+    return dict(_stats, memory_bytes=_mem_bytes, entries=len(_mem))
+
+
+def clear(*, disk: bool = False) -> None:
+    """Drop the in-process cache (and optionally the disk store)."""
+    global _mem_bytes
+    _mem.clear()
+    _summaries.clear()
+    _mem_bytes = 0
+    for k in _stats:
+        _stats[k] = 0
+    if disk:
+        d = _dir()
+        if d and os.path.isdir(d):
+            for f in os.listdir(d):
+                if f.endswith((".npz", ".json")):
+                    try:
+                        os.unlink(os.path.join(d, f))
+                    except OSError:
+                        pass
+
+
+def _dir() -> str | None:
+    if _cfg.directory:
+        return _cfg.directory
+    # default: next to the benchmark artifacts when run from a repo,
+    # else a per-user cache directory
+    if os.path.isdir("experiments"):
+        return os.path.join("experiments", ".rescache")
+    return os.path.join(os.path.expanduser("~"), ".cache",
+                        "repro-rescache")
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints
+# ---------------------------------------------------------------------------
+
+def trace_fingerprint(acc: MemAccess) -> str:
+    """Content digest of one address trace (cached on the object).
+
+    Materialized traces up to :data:`FULL_HASH_MAX` addresses hash their
+    full contents; longer or window-generated traces hash a deterministic
+    spread of :data:`SAMPLE_WINDOWS` windows plus the length (``gen``
+    must be pure in its arguments — already part of the ``MemAccess``
+    contract, since the simulators re-window traces freely)."""
+    fp = acc.__dict__.get("_fingerprint")
+    if fp is not None:
+        return fp
+    h = hashlib.blake2b(digest_size=16)
+    n = len(acc)
+    h.update(str(n).encode())
+    if acc.addrs is not None and n <= FULL_HASH_MAX:
+        h.update(b"full")
+        h.update(np.ascontiguousarray(acc.addrs).tobytes())
+    else:
+        h.update(b"sampled")
+        if acc.gen is not None:
+            # fold in the generator itself — bytecode plus any scalar
+            # closure parameters — so two generators that happen to agree
+            # on the sampled windows still get distinct keys unless they
+            # are literally the same code with the same parameters
+            code = getattr(acc.gen, "__code__", None)
+            if code is not None:
+                h.update(code.co_code)
+                h.update(repr(code.co_consts).encode())
+            for cell in getattr(acc.gen, "__closure__", None) or ():
+                try:
+                    v = cell.cell_contents
+                except ValueError:
+                    continue
+                if isinstance(v, (int, float, str, bytes, bool)):
+                    h.update(repr(v).encode())
+                elif isinstance(v, np.ndarray) and v.size <= 4096:
+                    h.update(v.tobytes())
+        step = max(1, (n - SAMPLE_LEN) // max(1, SAMPLE_WINDOWS - 1))
+        for i in range(SAMPLE_WINDOWS):
+            lo = min(i * step, max(0, n - SAMPLE_LEN))
+            hi = min(n, lo + SAMPLE_LEN)
+            if hi <= lo:
+                break
+            h.update(acc._raw_window(lo, hi).tobytes())
+    fp = h.hexdigest()
+    acc.__dict__["_fingerprint"] = fp
+    return fp
+
+
+def _mem_signature(mem: MemoryModel) -> tuple:
+    cache = None
+    if mem.cache is not None:
+        c = mem.cache
+        cache = (c.size_bytes, c.line_bytes, c.ways, c.hit_cycles,
+                 c.write_allocate)
+    return (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
+            mem.words_per_cycle, mem.max_outstanding, mem.posted_writes,
+            mem.line_bytes, cache)
+
+
+def _stage_signature(stages: Sequence[SimStage]) -> tuple:
+    # latency is deliberately absent: it never reaches the resolved arrays
+    return tuple(
+        (st.ii, st.mem_in_scc,
+         tuple((trace_fingerprint(acc), acc.is_store)
+               for acc in st.accesses))
+        for st in stages)
+
+
+def resolution_key(kind: str, stages: Sequence[SimStage],
+                   mem: MemoryModel, seed: int, n_iters: int,
+                   extra: Any = None) -> str:
+    """Content-addressed key for one resolution product."""
+    payload = (_KEY_VERSION, kind, _stage_signature(stages),
+               _mem_signature(mem), seed, n_iters, extra)
+    return hashlib.blake2b(repr(payload).encode(),
+                           digest_size=16).hexdigest()
+
+
+def processor_key(accesses: Sequence[MemAccess], model: Any,
+                  n_iters: int) -> str:
+    payload = (_KEY_VERSION, "processor",
+               tuple((trace_fingerprint(a), a.is_store) for a in accesses),
+               (model.l1_kb, model.l2_kb, model.l1_hit, model.l2_hit),
+               n_iters)
+    return hashlib.blake2b(repr(payload).encode(),
+                           digest_size=16).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Artifacts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ResolvedTrace:
+    """One memoized resolution product: the per-stage ``(c, lat_add)``
+    arrays for all ``n_iters`` iterations plus the cache statistics.
+    ``chunk(lo, hi)`` serves zero-copy views, so any chunking scheme
+    replays bit-identically."""
+
+    key: str
+    n_iters: int
+    c: list[np.ndarray]
+    lat_add: list[np.ndarray]
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.c) \
+            + sum(a.nbytes for a in self.lat_add)
+
+    def chunk(self, lo: int, hi: int) -> _ResolvedChunk:
+        return _ResolvedChunk(lo, hi, [a[lo:hi] for a in self.c],
+                              [a[lo:hi] for a in self.lat_add])
+
+
+class ArtifactWriter:
+    """Accumulates resolved chunks while a live run streams, and commits
+    the assembled :class:`ResolvedTrace` when the run finishes — unless
+    the artifact would exceed the size cap, in which case it silently
+    abandons collection (the run itself is unaffected)."""
+
+    def __init__(self, key: str, stages: Sequence[SimStage],
+                 n_iters: int):
+        self.key = key
+        self.n_iters = n_iters
+        S = len(stages)
+        est = 2 * S * n_iters * 4  # int32 c + lat_add per stage
+        self.dead = est > _cfg.artifact_mb * (1 << 20)
+        if self.dead:
+            _stats["too_large"] += 1
+        self.chunks: list[_ResolvedChunk] = []
+
+    def add(self, chunk: _ResolvedChunk) -> None:
+        if not self.dead:
+            self.chunks.append(chunk)
+
+    def finish(self, cache_hits: int, cache_misses: int) -> None:
+        if self.dead or not self.chunks:
+            return
+        S = len(self.chunks[0].c)
+        c = [np.concatenate([ch.c[s] for ch in self.chunks])
+             for s in range(S)]
+        lat = [np.concatenate([ch.lat_add[s] for ch in self.chunks])
+               for s in range(S)]
+        art = ResolvedTrace(self.key, self.n_iters, c, lat,
+                            cache_hits, cache_misses)
+        put(art)
+
+
+def _touch_lru(key: str) -> None:
+    _mem.move_to_end(key)
+
+
+def _insert_mem(art: ResolvedTrace) -> None:
+    global _mem_bytes
+    cap = _cfg.memory_mb * (1 << 20)
+    if art.nbytes > cap:
+        return
+    if art.key in _mem:
+        _mem_bytes -= _mem[art.key].nbytes
+        del _mem[art.key]
+    _mem[art.key] = art
+    _mem_bytes += art.nbytes
+    while _mem_bytes > cap and _mem:
+        _, old = _mem.popitem(last=False)
+        _mem_bytes -= old.nbytes
+
+
+def get(key: str) -> ResolvedTrace | None:
+    """Look an artifact up in the in-process LRU, then the disk store."""
+    art = _mem.get(key)
+    if art is not None:
+        _stats["mem_hits"] += 1
+        _touch_lru(key)
+        return art
+    d = _dir()
+    path = os.path.join(d, key + ".npz") if d else None
+    if path and os.path.exists(path):
+        try:
+            with np.load(path) as z:
+                meta = z["meta"]
+                S = int(meta[3])
+                art = ResolvedTrace(
+                    key, int(meta[2]),
+                    [z[f"c{s}"] for s in range(S)],
+                    [z[f"l{s}"] for s in range(S)],
+                    int(meta[0]), int(meta[1]))
+            os.utime(path)  # LRU recency for the disk evictor
+            _stats["disk_hits"] += 1
+            _insert_mem(art)
+            return art
+        except (OSError, KeyError, ValueError, _BadZipFile):
+            _stats["disk_errors"] += 1
+    _stats["misses"] += 1
+    return None
+
+
+def put(art: ResolvedTrace) -> None:
+    """Commit an artifact to the in-process LRU and the disk store."""
+    if art.nbytes > _cfg.artifact_mb * (1 << 20):
+        _stats["too_large"] += 1
+        return
+    _stats["stores"] += 1
+    _insert_mem(art)
+    d = _dir()
+    if not d:
+        return
+    try:
+        os.makedirs(d, exist_ok=True)
+        payload = {"meta": np.array(
+            [art.cache_hits, art.cache_misses, art.n_iters, len(art.c)],
+            dtype=np.int64)}
+        for s, a in enumerate(art.c):
+            payload[f"c{s}"] = a
+        for s, a in enumerate(art.lat_add):
+            payload[f"l{s}"] = a
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **payload)
+            os.replace(tmp, os.path.join(d, art.key + ".npz"))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        _evict_disk(d)
+    except OSError:
+        _stats["disk_errors"] += 1
+
+
+def _evict_disk(d: str) -> None:
+    """Keep the store under the disk cap, oldest access first."""
+    cap = _cfg.disk_mb * (1 << 20)
+    try:
+        files = [(os.path.join(d, f)) for f in os.listdir(d)
+                 if f.endswith(".npz")]
+        sizes = {f: os.path.getsize(f) for f in files}
+        total = sum(sizes.values())
+        if total <= cap:
+            return
+        for f in sorted(files, key=os.path.getmtime):
+            try:
+                os.unlink(f)
+                total -= sizes[f]
+            except OSError:
+                pass
+            if total <= cap:
+                break
+    except OSError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Tiny summary artifacts (conventional stalls, processor hit counts)
+# ---------------------------------------------------------------------------
+
+def get_summary(key: str) -> dict | None:
+    s = _summaries.get(key)
+    if s is not None:
+        _stats["mem_hits"] += 1
+        return s
+    d = _dir()
+    path = os.path.join(d, key + ".json") if d else None
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                s = json.load(f)
+            _stats["disk_hits"] += 1
+            _summaries[key] = s
+            return s
+        except (OSError, ValueError):
+            _stats["disk_errors"] += 1
+    _stats["misses"] += 1
+    return None
+
+
+def put_summary(key: str, summary: dict) -> None:
+    _stats["stores"] += 1
+    _summaries[key] = summary
+    while len(_summaries) > 4096:
+        _summaries.popitem(last=False)
+    d = _dir()
+    if not d:
+        return
+    try:
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(summary, f)
+            os.replace(tmp, os.path.join(d, key + ".json"))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+    except OSError:
+        _stats["disk_errors"] += 1

@@ -21,8 +21,9 @@ import numpy as np
 from ..core.decouple import DecoupledProgram
 from ..core.pipeline import SystolicPipeline, gpipe_bubble_fraction
 from ..core.simulator import (MemAccess, MemoryModel, SimResult, SimStage,
-                              acp, simulate_conventional, simulate_dataflow,
-                              standard_memory_models)
+                              acp, simulate_conventional,
+                              simulate_conventional_many, simulate_dataflow,
+                              simulate_dataflow_many, standard_memory_models)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,13 +266,14 @@ def simulate_schedule(
     fifo_depth: int = 8,
     microbatches: int = 6,
     seed: int = 0,
+    use_rescache: bool | None = None,
 ) -> SimReport:
     mem = mem or acp()
     stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
     df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth,
-                           seed=seed)
+                           seed=seed, use_rescache=use_rescache)
     cv = simulate_conventional([fused_stage(stages)], mem, n_iters,
-                               seed=seed)
+                               seed=seed, use_rescache=use_rescache)
     return SimReport(schedule, stages, df, cv, mem, n_iters, microbatches)
 
 
@@ -302,8 +304,12 @@ class SweepResult:
     """Grid of fully-simulated machine comparisons.
 
     ``rows`` is JSON-ready: one dict per (memory model × fifo depth ×
-    SCC mode) point with dataflow/conventional cycles, cycles/iteration,
-    runtimes, speedup, stall buckets, and cache statistics.
+    SCC mode × bandwidth × outstanding-cap) point with
+    dataflow/conventional cycles, cycles/iteration, runtimes, speedup,
+    stall buckets, cache statistics, and the FIFO storage cost
+    (``fifo_bits`` = depth × channel bits).  ``pareto()`` returns the
+    cycles-vs-FIFO-bits frontier (HIDA-style: how much buffering the
+    latency tolerance actually needs).
     """
 
     rows: list[dict]
@@ -313,25 +319,47 @@ class SweepResult:
         """The grid point minimizing ``metric``."""
         return min(self.rows, key=lambda r: r[metric])
 
+    def pareto(self, x: str = "fifo_bits",
+               y: str = "dataflow_cycles") -> list[dict]:
+        """Non-dominated rows minimizing ``(x, y)`` — by default the
+        cycles-vs-FIFO-storage frontier.  Rows on the front are also
+        marked in place (``row["pareto"] = True``)."""
+        for r in self.rows:
+            r["pareto"] = False
+        front: list[dict] = []
+        best_y = None
+        for r in sorted(self.rows, key=lambda r: (r[x], r[y])):
+            if best_y is None or r[y] < best_y:
+                best_y = r[y]
+                r["pareto"] = True
+                front.append(r)
+        return front
+
     def to_json(self) -> dict:
         return {"n_iters": self.n_iters, "rows": self.rows}
 
     def summary(self) -> str:
         lines = [f"sweep over {len(self.rows)} configurations "
                  f"({self.n_iters} iterations each):",
-                 f"  {'mem':<10}{'fifo':>5}{'scc':>8}"
+                 f"  {'mem':<10}{'fifo':>5}{'scc':>8}{'wpc':>5}{'mo':>4}"
                  f"{'df cyc/it':>11}{'conv cyc/it':>13}{'speedup':>9}"]
         for r in self.rows:
             lines.append(
                 f"  {r['mem']:<10}{r['fifo_depth']:>5}"
                 f"{r['mem_in_scc']:>8}"
+                f"{r['words_per_cycle']:>5.2g}{r['max_outstanding']:>4}"
                 f"{r['dataflow_cpi']:>11.2f}{r['conventional_cpi']:>13.2f}"
                 f"{r['speedup']:>9.2f}")
         b = self.best()
+        front = self.pareto()
         lines.append(f"  best dataflow config: {b['mem']} "
                      f"fifo={b['fifo_depth']} scc={b['mem_in_scc']} "
                      f"({b['dataflow_cpi']:.2f} cyc/iter, "
                      f"{b['speedup']:.2f}x over conventional)")
+        lines.append(
+            "  cycles-vs-FIFO-bits Pareto front: "
+            + " → ".join(f"{r['fifo_depth']}@{r['fifo_bits']}b"
+                         f"={r['dataflow_cycles']}" for r in front))
         return "\n".join(lines)
 
 
@@ -346,41 +374,81 @@ def sweep_schedule(
     seed: int = 0,
     freq_mhz: float = 150.0,
     max_outstanding: int | None = None,
+    words_per_cycle: Iterable[float] | None = None,
+    max_outstandings: Iterable[int] | None = None,
+    collect_stalls: bool = True,
+    use_rescache: bool | None = None,
 ) -> SweepResult:
     """Grid-run the cycle simulator over memory models (§V: ACP / HP,
-    ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes.
+    ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes × port bandwidths
+    (``words_per_cycle``) × in-flight caps (``max_outstandings``).
 
     Every point simulates all ``n_iters`` iterations (no steady-state
-    extrapolation).  The conventional engine has no FIFOs, so its result
-    is shared across depths within a (memory, SCC-mode) pair.
+    extrapolation), but the planner orders the grid so cells share work
+    instead of re-resolving the same traces: per SCC mode, *all* memory
+    variants and FIFO depths run through one
+    :func:`~repro.core.simulator.simulate_dataflow_many` pass — windows
+    and burst masks are computed once, each distinct cache geometry
+    replays once, bandwidth/outstanding variants reuse the same draws,
+    and each FIFO depth only re-runs the wavefront solve.  The
+    conventional engine has no FIFOs and ignores both SCC classification
+    and the decoupled-port knobs, so one simulation per memory model
+    covers its share of the grid.  Resolved traces are further memoized
+    across calls and processes via :mod:`repro.core.rescache`
+    (``use_rescache=False`` opts out).
     """
     mems = dict(mems) if mems is not None else standard_memory_models()
     fifo_depths = tuple(fifo_depths)
     scc_modes = tuple(scc_modes)
+    wpcs = tuple(words_per_cycle) if words_per_cycle is not None else (None,)
+    mos = tuple(max_outstandings) if max_outstandings is not None \
+        else (max_outstanding,)
     base_stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    channel_bits = schedule.channel_bytes * 8
+
+    def variant(mk: Callable[[], MemoryModel], wpc, mo) -> MemoryModel:
+        m = mk()
+        if wpc is not None:
+            m.words_per_cycle = wpc
+        if mo is not None:
+            m.max_outstanding = mo
+        return m
+
+    # conventional: one run per memory model (no FIFOs, no decoupled-port
+    # knobs, SCC-independent), shared across the rest of the grid
+    conv_mems = {mn: variant(mk, None, mos[0]) for mn, mk in mems.items()}
+    conv = simulate_conventional_many(
+        [fused_stage(base_stages)], conv_mems, n_iters,
+        freq_mhz=freq_mhz, seed=seed, use_rescache=use_rescache)
+
     rows: list[dict] = []
-    for mem_name, mk in mems.items():
-        # the conventional engine has no FIFOs and resolves every access
-        # regardless of SCC classification: one simulation per memory
-        # model, shared across both grid axes
-        conv_mem = mk()
-        if max_outstanding is not None:
-            conv_mem.max_outstanding = max_outstanding
-        cv = simulate_conventional([fused_stage(base_stages)], conv_mem,
-                                   n_iters, freq_mhz=freq_mhz, seed=seed)
-        for mode in scc_modes:
-            stages = _with_scc_mode(base_stages, mode)
+    for mode in scc_modes:
+        stages = _with_scc_mode(base_stages, mode)
+        variants: dict[str, tuple[str, float | None, int | None]] = {}
+        vmems: dict[str, MemoryModel] = {}
+        for mn, mk in mems.items():
+            for wpc in wpcs:
+                for mo in mos:
+                    vn = mn if (wpc is None and mo is None) \
+                        else f"{mn}|wpc={wpc}|mo={mo}"
+                    variants[vn] = (mn, wpc, mo)
+                    vmems[vn] = variant(mk, wpc, mo)
+        grid = simulate_dataflow_many(
+            stages, vmems, n_iters, fifo_depths=fifo_depths,
+            freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
+            use_rescache=use_rescache)
+        for vn, (mn, wpc, mo) in variants.items():
+            cv = conv[mn]
+            m = vmems[vn]
             for depth in fifo_depths:
-                mem = mk()
-                if max_outstanding is not None:
-                    mem.max_outstanding = max_outstanding
-                df = simulate_dataflow(stages, mem, n_iters,
-                                       fifo_depth=depth,
-                                       freq_mhz=freq_mhz, seed=seed)
+                df = grid[(vn, depth)]
                 rows.append({
-                    "mem": mem_name,
+                    "mem": mn,
                     "fifo_depth": depth,
+                    "fifo_bits": depth * channel_bits,
                     "mem_in_scc": mode,
+                    "words_per_cycle": m.words_per_cycle,
+                    "max_outstanding": m.max_outstanding,
                     "dataflow_cycles": df.cycles,
                     "conventional_cycles": cv.cycles,
                     "dataflow_cpi": df.cycles_per_iter,
@@ -392,4 +460,6 @@ def sweep_schedule(
                     "cache_hits": df.cache_hits,
                     "cache_misses": df.cache_misses,
                 })
-    return SweepResult(rows, n_iters)
+    res = SweepResult(rows, n_iters)
+    res.pareto()  # mark the default frontier on the rows
+    return res

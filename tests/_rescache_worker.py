@@ -1,0 +1,22 @@
+"""Spawn-pool worker for the rescache cross-process test (top-level
+module so a spawn context can import it)."""
+
+import numpy as np
+
+
+def run_cell(args):
+    """Simulate one dataflow cell; returns (cycles, rescache stats)."""
+    cache_dir, seed = args
+    from repro.core import rescache as rc
+    from repro.core.simulator import MemAccess, SimStage, acp_cache, \
+        simulate_dataflow
+    rc.configure(enabled=True, directory=cache_dir)
+    rng = np.random.default_rng(11)
+    n = 4000
+    stages = [
+        SimStage("f", ii=1, latency=2,
+                 accesses=[MemAccess("x", rng.integers(0, 1 << 18, n) * 4)]),
+        SimStage("g", ii=2, latency=3),
+    ]
+    r = simulate_dataflow(stages, acp_cache(), n, fifo_depth=8, seed=seed)
+    return r.cycles, rc.stats()

@@ -1,0 +1,15 @@
+"""Shared test fixtures."""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_rescache(tmp_path_factory, monkeypatch):
+    """Point the resolution cache at a per-session temp directory so test
+    runs never read stale artifacts from (or write into) the repo's
+    ``experiments/.rescache``.  Tests that need specific cache behaviour
+    (tests/test_rescache.py) reconfigure it themselves."""
+    from repro.core import rescache as rc
+    d = tmp_path_factory.getbasetemp() / "rescache"
+    monkeypatch.setattr(rc._cfg, "directory", str(d))
+    yield

@@ -141,8 +141,8 @@ def test_processor_baseline_reasonable():
 @pytest.mark.parametrize("pattern", ["random", "sequential", "dup_runs"])
 def test_batched_cache_matches_scalar(ways, pattern):
     """BatchedCacheSim must reproduce CacheSim access-for-access —
-    including the 2-way closed form, the rounds path, and state carried
-    across chunked lookups."""
+    including the 2-way closed form, the segmented N-way scan, and state
+    carried across chunked lookups."""
     cfg = CacheConfig(size_bytes=4096, line_bytes=32, ways=ways)
     rng = np.random.default_rng(ways)
     n = 4000
@@ -157,6 +157,64 @@ def test_batched_cache_matches_scalar(ways, pattern):
     got = np.concatenate([bc.lookup(addrs[i:i + 701])
                           for i in range(0, n, 701)])
     np.testing.assert_array_equal(ref, got)
+    assert (sc.hits, sc.misses) == (bc.hits, bc.misses)
+
+
+@pytest.mark.parametrize("ways", [3, 4, 8, 16])
+@pytest.mark.parametrize("pattern", ["one_set", "skewed", "cyclic",
+                                     "seg_edge"])
+def test_nway_scan_adversarial(ways, pattern):
+    """The segmented distinct-distance scan vs the scalar LRU on the
+    patterns that killed the old rounds replay (extreme per-set skew) or
+    probe the scan's edges: single-set floods, cyclic reuse exactly at
+    the associativity boundary, and runs crossing segment boundaries."""
+    cfg = CacheConfig(size_bytes=ways * 8 * 32, line_bytes=32, ways=ways)
+    bc = BatchedCacheSim(cfg)
+    n_sets = bc.n_sets
+    rng = np.random.default_rng(ways * 100 + len(pattern))
+    n = 3000
+    if pattern == "one_set":
+        # everything lands in set 0: maximum skew
+        addrs = rng.integers(0, ways + 3, n) * n_sets * 32
+    elif pattern == "skewed":
+        # zipf-ish: a few sets get almost all traffic
+        s = rng.zipf(1.3, n) % n_sets
+        line = s + n_sets * rng.integers(0, ways + 2, n)
+        addrs = line * 32
+    elif pattern == "cyclic":
+        # round-robin over exactly ways+1 lines of one set: every access
+        # misses under LRU (the classic worst case), all stack distances
+        # sit at the associativity boundary
+        addrs = (np.arange(n) % (ways + 1)) * n_sets * 32
+    else:  # seg_edge: duplicate runs straddling the segment width
+        base = np.repeat(rng.integers(0, ways + 2, n // 7 + 1), 7)[:n]
+        addrs = base * n_sets * 32
+    addrs = addrs.astype(np.int64)
+    sc = CacheSim(cfg)
+    ref = np.array([sc.access(int(a)) for a in addrs])
+    # chunk at awkward boundaries so carried stacks are exercised
+    got = np.concatenate([bc.lookup(addrs[i:i + 613])
+                          for i in range(0, n, 613)])
+    np.testing.assert_array_equal(ref, got)
+    assert (sc.hits, sc.misses) == (bc.hits, bc.misses)
+    if pattern == "cyclic":
+        assert bc.hits == 0  # LRU's worst case: every access misses
+
+
+def test_nway_carried_tags_beyond_int32():
+    """Regression: the narrow-dtype decision must account for tags
+    carried from *earlier* lookups — a first chunk touching addresses
+    past 2^31·lines must not wrap when a later small-address chunk
+    arrives (wrapped carried tags aliased fresh ones as spurious hits)."""
+    cfg = CacheConfig(size_bytes=4 * 8 * 32, line_bytes=32, ways=4)
+    sc, bc = CacheSim(cfg), BatchedCacheSim(cfg)
+    n_sets = bc.n_sets
+    huge = (np.arange(3, dtype=np.int64) + (1 << 32)) * n_sets * 32
+    small = np.arange(3, dtype=np.int64) * n_sets * 32
+    for chunk in (huge, small, huge):
+        ref = np.array([sc.access(int(a)) for a in chunk])
+        got = bc.lookup(chunk)
+        np.testing.assert_array_equal(ref, got)
     assert (sc.hits, sc.misses) == (bc.hits, bc.misses)
 
 
