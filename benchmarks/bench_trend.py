@@ -90,6 +90,30 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                             f"fig5 {kn}/{mem} {field}: {pv} -> {cv} "
                             f"(+{cv / pv - 1:.1%})")
 
+    # --- partition-space DSE ------------------------------------------------
+    pd, cd = prev.get("dse"), cur.get("dse")
+    if pd and cd and pd.get("smoke") == cd.get("smoke"):
+        for kn, cr in cd.get("kernels", {}).items():
+            pr = pd.get("kernels", {}).get(kn)
+            if not pr or any(pr.get(f) != cr.get(f) for f in
+                             ("n_iters", "fifo_depth")) or \
+                    pd.get("max_candidates") != cd.get("max_candidates"):
+                continue
+            for field in ("baseline", "best"):
+                pv = (pr.get(field) or {}).get("cycles")
+                cv = (cr.get(field) or {}).get("cycles")
+                if pv and cv and cv / pv > CYCLE_TOL:
+                    failures.append(
+                        f"dse {kn} {field} cycles: {pv} -> {cv} "
+                        f"(+{cv / pv - 1:.1%})")
+            if pr.get("dominates_baseline") and \
+                    not cr.get("dominates_baseline"):
+                failures.append(
+                    f"dse {kn}: previously dominated Algorithm 1, "
+                    f"no longer does")
+    elif pd and cd:
+        notes.append("dse: smoke/full mismatch, skipped")
+
     # --- vectorized-engine throughput --------------------------------------
     # gate on the reference-vs-vectorized *speedup ratio* rather than raw
     # iters/s: both numerator and denominator see the same runner noise,

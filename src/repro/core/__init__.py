@@ -8,7 +8,9 @@ from .cdfg import (CDFG, LatencyModel, MEMORY_PRIMITIVES, DEFAULT_LATENCY,
                    add_memory_order_edges, annotate_memory_regions)
 from .partition import (Partition, Stage, StagePlan, Channel, partition_cdfg,
                         stage_groups, merge_costly_boundaries, materialize,
-                        duplicate_cheap_rewrite, derive_channels)
+                        duplicate_cheap_rewrite, derive_channels,
+                        plan_signature, plan_is_legal, merge_move,
+                        split_move, neighbor_plans, fused_plan, maximal_plan)
 from .decouple import (DecoupledProgram, decouple, decoupled_call,
                        run_stages_sequential)
 from .channels import ChannelSpec, DeviceFIFO, FIFOState, HostFIFO
@@ -23,6 +25,8 @@ __all__ = [
     "Partition", "Stage", "StagePlan", "Channel", "partition_cdfg",
     "stage_groups", "merge_costly_boundaries", "materialize",
     "duplicate_cheap_rewrite", "derive_channels",
+    "plan_signature", "plan_is_legal", "merge_move", "split_move",
+    "neighbor_plans", "fused_plan", "maximal_plan",
     "DecoupledProgram", "decouple", "decoupled_call",
     "run_stages_sequential",
     "ChannelSpec", "DeviceFIFO", "FIFOState", "HostFIFO",

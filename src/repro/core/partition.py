@@ -250,9 +250,23 @@ def materialize(cdfg: CDFG, plan: StagePlan) -> Partition:
 
 
 def duplicate_cheap_rewrite(part: Partition) -> Partition:
-    """§III-B1 rewrite: replicate cheap producers into consumer stages and
-    re-derive the channel set.  Mutates ``part`` in place and returns it."""
+    """§III-B1 rewrite: replicate cheap producers into consumer stages,
+    re-derive the channel set, and fold the duplicated producers' latencies
+    into their consumer stages' ``latency`` (the replica executes *inside*
+    the consumer, so its cycles belong to that stage's body — the old code
+    left consumer latencies at their pre-duplication values and the
+    simulator under-estimated those stages).  Latencies are recomputed
+    from scratch, so the rewrite is idempotent.  Mutates ``part`` in place
+    and returns it."""
     _duplicate_cheap_sccs(part)
+    cdfg = part.cdfg
+    extra: dict[int, int] = {}
+    for nid, consumers in part.duplicated.items():
+        for sid in consumers:
+            extra[sid] = extra.get(sid, 0) + cdfg.node(nid).latency
+    for s in part.stages:
+        s.latency = sum(cdfg.node(n).latency for n in s.node_ids) \
+            + extra.get(s.id, 0)
     part.channels = derive_channels(part)
     return part
 
@@ -352,11 +366,97 @@ def _duplicate_cheap_sccs(part: Partition) -> None:
         # only duplicate if every producer feeding this node is available in
         # the consumer stage (i.e. its inputs are jaxpr invars or themselves
         # duplicable/visible) — conservative: inputs must be graph inputs.
-        feeders = [e for e in cdfg.edges if e.dst == node.id
-                   and e.var is not None]
+        # Token edges (memory-order / carry, ``var is None``) count as
+        # feeders too: they carry an ordering constraint that a replica in
+        # the consumer stage would silently drop.
+        feeders = [e for e in cdfg.edges if e.dst == node.id]
         if feeders:
             continue
         part.duplicated[node.id] = consumer_stages
+
+
+# ---------------------------------------------------------------------------
+# Partition-space moves (the DSE layer, after HIDA / de Fine Licht et al.)
+#
+# A :class:`StagePlan` is the unit the explorer works on: ``groups`` is an
+# ordered list of SCC-id lists, each a contiguous run of the fixed topo
+# order.  The legal moves — merging two adjacent stages, splitting a stage
+# at an interior point — keep that shape, so SCCs are never split and the
+# topological order of the condensation is preserved by construction.
+# ``plan_is_legal`` re-checks both invariants independently (tests, and a
+# guard against hand-built plans).
+# ---------------------------------------------------------------------------
+
+
+def plan_signature(plan: StagePlan) -> tuple[tuple[int, ...], ...]:
+    """Canonical identity of a plan's stage grouping (for dedup): the
+    SCC groups, each named by its sorted member node ids."""
+    return tuple(tuple(sorted(n for k in grp for n in plan.sccs[k]))
+                 for grp in plan.groups)
+
+
+def plan_is_legal(cdfg: CDFG, plan: StagePlan) -> bool:
+    """A plan is legal iff (a) its groups partition the SCC set, (b) no
+    SCC is split across groups (structural: groups hold whole SCC ids),
+    and (c) every cross-group dependence edge flows forward — i.e. the
+    group order is a topological order of the condensation."""
+    seen: list[int] = [k for grp in plan.groups for k in grp]
+    if sorted(seen) != list(range(len(plan.sccs))):
+        return False
+    group_of: dict[int, int] = {}
+    for gi, grp in enumerate(plan.groups):
+        for k in grp:
+            group_of[k] = gi
+    for e in cdfg.edges:
+        a = plan.scc_of_node[e.src]
+        b = plan.scc_of_node[e.dst]
+        if a != b and group_of[a] > group_of[b]:
+            return False
+    return True
+
+
+def merge_move(plan: StagePlan, b: int) -> StagePlan:
+    """Merge adjacent groups ``b`` and ``b+1`` (always legal)."""
+    groups = [list(g) for g in plan.groups]
+    groups[b] = groups[b] + groups[b + 1]
+    del groups[b + 1]
+    return dataclasses.replace(plan, groups=groups)
+
+
+def split_move(plan: StagePlan, b: int, j: int) -> StagePlan:
+    """Split group ``b`` before its ``j``-th SCC (0 < j < len(group));
+    both halves keep their relative (topological) order, so the move is
+    always legal."""
+    groups = [list(g) for g in plan.groups]
+    grp = groups[b]
+    if not 0 < j < len(grp):
+        raise ValueError(f"split point {j} outside group of {len(grp)}")
+    groups[b:b + 1] = [grp[:j], grp[j:]]
+    return dataclasses.replace(plan, groups=groups)
+
+
+def neighbor_plans(plan: StagePlan) -> list[tuple[str, StagePlan]]:
+    """All single-move neighbours of ``plan``: every adjacent merge and
+    every interior split, with a human-readable move tag."""
+    out: list[tuple[str, StagePlan]] = []
+    for b in range(len(plan.groups) - 1):
+        out.append((f"merge({b},{b + 1})", merge_move(plan, b)))
+    for b, grp in enumerate(plan.groups):
+        for j in range(1, len(grp)):
+            out.append((f"split({b}@{j})", split_move(plan, b, j)))
+    return out
+
+
+def fused_plan(plan: StagePlan) -> StagePlan:
+    """The all-merged degenerate point of the move set (policy 'fused')."""
+    groups = [[k for grp in plan.groups for k in grp]] if plan.groups else []
+    return dataclasses.replace(plan, groups=groups)
+
+
+def maximal_plan(plan: StagePlan) -> StagePlan:
+    """The all-split degenerate point (policy 'maximal')."""
+    return dataclasses.replace(
+        plan, groups=[[k] for grp in plan.groups for k in grp])
 
 
 def derive_channels(part: Partition) -> list[Channel]:

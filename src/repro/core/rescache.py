@@ -22,16 +22,31 @@ The cache key is a blake2b digest of
   windows plus the length for window-generated traces (``gen`` must be
   pure in ``(lo, hi)``, which the :class:`~repro.core.simulator.MemAccess`
   contract already requires);
-* the **stage signature** — per stage ``(ii, mem_in_scc)`` plus each
-  access's ``(fingerprint, is_store)``.  Stage *latency* is deliberately
-  excluded: it shifts finish times in the solver but never the resolved
-  arrays;
-* the **memory model** — every numeric field (latencies, hit rate,
-  bandwidth, outstanding cap, posted-write flag, line size, full cache
-  geometry including ``write_allocate``).  The model's *name* is
-  excluded: two differently-named but identical models share;
+* the **op signature** — the iteration-major stream of per-op
+  ``(fingerprint, is_store, serialized?)`` triples, with *no stage
+  grouping*: two partitions of one kernel that merely regroup the same
+  memory ops (the DSE explorer's merge/split candidates) produce the
+  same key and share one artifact.  Stage *latency* and *II* are
+  deliberately excluded: they shift the solver, never the resolved
+  per-access latencies;
+* the **memory model**, restricted to the fields that reach the
+  resolved latencies: port/DRAM latencies, backing hit rate, cache
+  geometry including ``write_allocate``, and — through the burst
+  masks — ``line_bytes``.  Fold-only fields (``words_per_cycle``,
+  ``max_outstanding``, and — for the dataflow engine —
+  ``posted_writes``) are excluded: sweep lanes that only vary the port
+  knobs share one artifact.  The model's *name* is excluded too;
 * the **seed** and **iteration count**.  The chunk size is excluded —
   resolution is chunk-invariant (asserted by the streaming tests).
+
+The stored artifact is correspondingly **per-op**: the ``(n_iters, K)``
+matrix of resolved per-access latencies (zero where an op issued no
+request that iteration — invalid or burst-continuation slots).  Serving
+re-derives windows/burst masks from the traces (cheap, stateless) and
+folds the matrix into each consumer's per-stage ``(c, lat_add)`` arrays
+(:class:`repro.core.simulator._OpFolder`), so one artifact serves every
+stage grouping, chunk size, and fold-only model variant.  v1 per-stage
+artifacts are unreadable under the v2 keys and age out of the store.
 
 Results served from the cache are bit-identical to a fresh resolution;
 disable with ``REPRO_RESCACHE=0``, ``configure(enabled=False)``, or the
@@ -55,7 +70,7 @@ from zipfile import BadZipFile as _BadZipFile
 
 import numpy as np
 
-from .simulator import MemAccess, MemoryModel, SimStage, _ResolvedChunk
+from .simulator import MemAccess, MemoryModel, SimStage
 
 #: Materialized traces up to this many addresses are fingerprinted by
 #: full content; longer or generated traces by deterministic sampling.
@@ -65,7 +80,7 @@ FULL_HASH_MAX = 1 << 22
 SAMPLE_WINDOWS = 16
 SAMPLE_LEN = 4096
 
-_KEY_VERSION = "rescache-v1"
+_KEY_VERSION = "rescache-v2"
 
 
 @dataclasses.dataclass
@@ -126,6 +141,24 @@ def clear(*, disk: bool = False) -> None:
                         os.unlink(os.path.join(d, f))
                     except OSError:
                         pass
+
+
+def evict(key: str) -> None:
+    """Drop one artifact (or summary) from the in-process LRU and the
+    disk store.  Benchmark meters use this to keep cold-timing probes
+    cold across runs; missing keys are a no-op."""
+    global _mem_bytes
+    art = _mem.pop(key, None)
+    if art is not None:
+        _mem_bytes -= art.nbytes
+    _summaries.pop(key, None)
+    d = _dir()
+    if d:
+        for suffix in (".npz", ".json"):
+            try:
+                os.unlink(os.path.join(d, key + suffix))
+            except OSError:
+                pass
 
 
 def _dir() -> str | None:
@@ -192,32 +225,45 @@ def trace_fingerprint(acc: MemAccess) -> str:
     return fp
 
 
-def _mem_signature(mem: MemoryModel) -> tuple:
-    cache = None
-    if mem.cache is not None:
-        c = mem.cache
-        cache = (c.size_bytes, c.line_bytes, c.ways, c.hit_cycles,
-                 c.write_allocate)
-    return (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
-            mem.words_per_cycle, mem.max_outstanding, mem.posted_writes,
-            mem.line_bytes, cache)
-
-
-def _stage_signature(stages: Sequence[SimStage]) -> tuple:
-    # latency is deliberately absent: it never reaches the resolved arrays
-    return tuple(
-        (st.ii, st.mem_in_scc,
-         tuple((trace_fingerprint(acc), acc.is_store)
-               for acc in st.accesses))
-        for st in stages)
+def _cache_signature(mem: MemoryModel) -> tuple | None:
+    if mem.cache is None:
+        return None
+    c = mem.cache
+    return (c.size_bytes, c.line_bytes, c.ways, c.hit_cycles,
+            c.write_allocate)
 
 
 def resolution_key(kind: str, stages: Sequence[SimStage],
                    mem: MemoryModel, seed: int, n_iters: int,
                    extra: Any = None) -> str:
-    """Content-addressed key for one resolution product."""
-    payload = (_KEY_VERSION, kind, _stage_signature(stages),
-               _mem_signature(mem), seed, n_iters, extra)
+    """Content-addressed key for one resolution product.
+
+    The signature is **per-op**, not per-stage (see the module
+    docstring): stage grouping, latency, and II are absent, as are the
+    fold-only memory-model fields.  ``kind`` selects which per-op and
+    model fields matter:
+
+    * ``"dataflow"`` — ops carry their serialized flag (a
+      ``mem_in_scc`` stage's accesses never burst and serialize into
+      the II); the model contributes ``line_bytes`` (burst masks) but
+      not ``posted_writes`` (fold-only).
+    * ``"conventional"`` — no bursts and no serialization (every valid
+      access resolves), so neither flag keys; ``posted_writes`` *does*
+      (posted stores never stall the static engine, changing the stored
+      stall totals).
+    """
+    cache = _cache_signature(mem)
+    if kind == "conventional":
+        ops = tuple((trace_fingerprint(acc), acc.is_store)
+                    for st in stages for acc in st.accesses)
+        msig = (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
+                mem.posted_writes, cache)
+    else:
+        ops = tuple((trace_fingerprint(acc), acc.is_store, st.mem_in_scc)
+                    for st in stages for acc in st.accesses)
+        msig = (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
+                mem.line_bytes, cache)
+    payload = (_KEY_VERSION, kind, ops, msig, seed, n_iters, extra)
     return hashlib.blake2b(repr(payload).encode(),
                            digest_size=16).hexdigest()
 
@@ -238,58 +284,53 @@ def processor_key(accesses: Sequence[MemAccess], model: Any,
 
 @dataclasses.dataclass
 class ResolvedTrace:
-    """One memoized resolution product: the per-stage ``(c, lat_add)``
-    arrays for all ``n_iters`` iterations plus the cache statistics.
-    ``chunk(lo, hi)`` serves zero-copy views, so any chunking scheme
-    replays bit-identically."""
+    """One memoized resolution product: the **per-op** latency matrix
+    ``ops`` (``(n_iters, K)`` int32; ``ops[i, k]`` is the resolved
+    latency of the kernel's ``k``-th memory op at iteration ``i``, zero
+    when that op issued no request — invalid or burst-continuation
+    slot) plus the cache statistics.  ``chunk(lo, hi)`` serves zero-copy
+    views; consumers fold them into per-stage arrays via
+    :class:`repro.core.simulator._OpFolder`, so any stage grouping and
+    any chunking scheme replays bit-identically."""
 
     key: str
     n_iters: int
-    c: list[np.ndarray]
-    lat_add: list[np.ndarray]
+    ops: np.ndarray
     cache_hits: int = 0
     cache_misses: int = 0
 
     @property
     def nbytes(self) -> int:
-        return sum(a.nbytes for a in self.c) \
-            + sum(a.nbytes for a in self.lat_add)
+        return self.ops.nbytes
 
-    def chunk(self, lo: int, hi: int) -> _ResolvedChunk:
-        return _ResolvedChunk(lo, hi, [a[lo:hi] for a in self.c],
-                              [a[lo:hi] for a in self.lat_add])
+    def chunk(self, lo: int, hi: int) -> np.ndarray:
+        return self.ops[lo:hi]
 
 
 class ArtifactWriter:
-    """Accumulates resolved chunks while a live run streams, and commits
-    the assembled :class:`ResolvedTrace` when the run finishes — unless
-    the artifact would exceed the size cap, in which case it silently
-    abandons collection (the run itself is unaffected)."""
+    """Accumulates per-op latency chunks while a live run streams, and
+    commits the assembled :class:`ResolvedTrace` when the run finishes —
+    unless the artifact would exceed the size cap, in which case it
+    silently abandons collection (the run itself is unaffected)."""
 
-    def __init__(self, key: str, stages: Sequence[SimStage],
-                 n_iters: int):
+    def __init__(self, key: str, n_ops: int, n_iters: int):
         self.key = key
         self.n_iters = n_iters
-        S = len(stages)
-        est = 2 * S * n_iters * 4  # int32 c + lat_add per stage
+        est = n_ops * n_iters * 4  # int32 per (op, iteration)
         self.dead = est > _cfg.artifact_mb * (1 << 20)
         if self.dead:
             _stats["too_large"] += 1
-        self.chunks: list[_ResolvedChunk] = []
+        self.chunks: list[np.ndarray] = []
 
-    def add(self, chunk: _ResolvedChunk) -> None:
+    def add(self, ops_chunk: np.ndarray) -> None:
         if not self.dead:
-            self.chunks.append(chunk)
+            self.chunks.append(ops_chunk)
 
     def finish(self, cache_hits: int, cache_misses: int) -> None:
         if self.dead or not self.chunks:
             return
-        S = len(self.chunks[0].c)
-        c = [np.concatenate([ch.c[s] for ch in self.chunks])
-             for s in range(S)]
-        lat = [np.concatenate([ch.lat_add[s] for ch in self.chunks])
-               for s in range(S)]
-        art = ResolvedTrace(self.key, self.n_iters, c, lat,
+        art = ResolvedTrace(self.key, self.n_iters,
+                            np.concatenate(self.chunks, axis=0),
                             cache_hits, cache_misses)
         put(art)
 
@@ -326,12 +367,8 @@ def get(key: str) -> ResolvedTrace | None:
         try:
             with np.load(path) as z:
                 meta = z["meta"]
-                S = int(meta[3])
-                art = ResolvedTrace(
-                    key, int(meta[2]),
-                    [z[f"c{s}"] for s in range(S)],
-                    [z[f"l{s}"] for s in range(S)],
-                    int(meta[0]), int(meta[1]))
+                art = ResolvedTrace(key, int(meta[2]), z["ops"],
+                                    int(meta[0]), int(meta[1]))
             os.utime(path)  # LRU recency for the disk evictor
             _stats["disk_hits"] += 1
             _insert_mem(art)
@@ -355,12 +392,9 @@ def put(art: ResolvedTrace) -> None:
     try:
         os.makedirs(d, exist_ok=True)
         payload = {"meta": np.array(
-            [art.cache_hits, art.cache_misses, art.n_iters, len(art.c)],
-            dtype=np.int64)}
-        for s, a in enumerate(art.c):
-            payload[f"c{s}"] = a
-        for s, a in enumerate(art.lat_add):
-            payload[f"l{s}"] = a
+            [art.cache_hits, art.cache_misses, art.n_iters,
+             art.ops.shape[1]],
+            dtype=np.int64), "ops": art.ops}
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:

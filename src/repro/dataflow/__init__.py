@@ -30,10 +30,12 @@ from .backends import (Backend, BackendUnavailableError, available_backends,
                        registered_backends, unregister_backend)
 from .driver import (Compiled, cache_stats, clear_cache, compile,
                      dataflow_jit)
-from .options import CompileOptions
-from .passes import (CompileContext, DecouplePass, MemoryDepPass, Pass,
-                     PartitionPass, PassPipeline, RewritePass, SchedulePass,
-                     TracePass, default_pipeline)
+from .dse import (DseCandidate, DseResult, enumerate_plans, explore,
+                  explore_plans, partition_resources)
+from .options import CompileOptions, ResourceConstraints
+from .passes import (CompileContext, DecouplePass, DsePass, MemoryDepPass,
+                     Pass, PartitionPass, PassPipeline, RewritePass,
+                     SchedulePass, TracePass, default_pipeline)
 from .schedule import (Schedule, SimReport, StageSummary, SweepResult,
                        fused_stage, simulate_schedule, sweep_schedule)
 
@@ -42,10 +44,12 @@ __all__ = [
     "execute_backends", "get_backend", "register_backend",
     "registered_backends", "unregister_backend",
     "Compiled", "cache_stats", "clear_cache", "compile", "dataflow_jit",
-    "CompileOptions",
+    "CompileOptions", "ResourceConstraints",
+    "DseCandidate", "DseResult", "enumerate_plans", "explore",
+    "explore_plans", "partition_resources",
     "CompileContext", "Pass", "PassPipeline", "TracePass", "MemoryDepPass",
-    "PartitionPass", "RewritePass", "DecouplePass", "SchedulePass",
-    "default_pipeline",
+    "PartitionPass", "RewritePass", "DsePass", "DecouplePass",
+    "SchedulePass", "default_pipeline",
     "Schedule", "SimReport", "StageSummary", "SweepResult", "fused_stage",
     "simulate_schedule", "sweep_schedule",
 ]

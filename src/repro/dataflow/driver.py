@@ -39,6 +39,10 @@ class Compiled:
       ``simulate(...)``   — discrete-event Fig. 2/5 schedule report.
       ``sweep(...)``      — design-space sweep over memory models × FIFO
         depths × SCC modes (fully simulated grid; ``SweepResult``).
+      ``explore(...)``    — partition-space DSE: merge/split/duplicate
+        re-partitionings under resource constraints, fully simulated;
+        returns a cycles-vs-FIFO-bits Pareto front of ``Compiled``
+        artifacts (``DseResult``).
       ``report()``        — per-stage latency / channel summary (text).
       ``cdfg`` / ``partition`` / ``program`` / ``schedule`` — the pass
         products, for inspection and downstream tools.
@@ -113,6 +117,23 @@ class Compiled:
         :func:`repro.dataflow.schedule.sweep_schedule`; dispatched through
         the ``simulate`` backend)."""
         return get_backend("simulate").sweep(self, **kwargs)
+
+    def explore(self, **kwargs: Any) -> Any:
+        """Partition-space DSE (see :func:`repro.dataflow.dse.explore`):
+        enumerate legal merge/split/duplicate re-partitionings of this
+        kernel, prune against a
+        :class:`~repro.dataflow.options.ResourceConstraints` resource
+        model, simulate every survivor (sharing resolved traces through
+        the per-op rescache), and return a
+        :class:`~repro.dataflow.dse.DseResult` whose cycles-vs-FIFO-bits
+        Pareto front carries full ``Compiled`` artifacts."""
+        from . import dse as _dse
+        return _dse.explore(self, **kwargs)
+
+    @property
+    def dse_result(self):
+        """The ``dse`` pass's exploration (None unless ``options.dse``)."""
+        return self.context.dse_result
 
     def sim_stages(self, traces: Any = None, **kwargs: Any):
         """Cycle-simulator stage specs (II/latency/mem-in-SCC from the real

@@ -1,0 +1,622 @@
+"""Partition-space design-space exploration over :class:`StagePlan`s.
+
+Algorithm 1 fixes *one* partitioning rule — cut after every memory op or
+long SCC — but the quality of the dataflow template under area/FIFO
+constraints depends on *which* partition you pick: HIDA (Ye et al.,
+2023) shows hierarchical dataflow DSE over partitions is where the real
+wins are, and de Fine Licht et al. (2018) catalog the merge / split /
+duplicate transformations such a search must enumerate.  This module is
+that explorer for the template:
+
+1. **Enumerate** — BFS over the legal single moves (adjacent-stage
+   merges, interior splits; SCCs are never split and topological order
+   is preserved by construction — see
+   :func:`repro.core.partition.neighbor_plans`) from the Algorithm 1
+   plan, with the ``fused`` / ``maximal`` degenerate plans always
+   included; the §III-B1 cheap-op duplication rewrite is a per-candidate
+   toggle (the *duplicate* move).
+2. **Prune** — against :class:`~repro.dataflow.options.ResourceConstraints`:
+   total FIFO bits, per-stage memory-port count, duplication budget,
+   stage count.  Pruned candidates are never simulated.
+3. **Evaluate** — every survivor runs through the *real* cycle
+   simulator (no analytic shortcut).  Candidate partitions of one
+   kernel regroup the same memory ops, so the per-op rescache keying
+   (:mod:`repro.core.rescache`) lets every candidate after the first
+   serve its trace resolution from cache: DSE over many candidates
+   costs little more than one cold simulation, with cycle counts
+   bit-identical to fresh per-candidate runs.
+4. **Select** — the cycles-vs-FIFO-bits Pareto front, each front point
+   materialized as a full :class:`~repro.dataflow.driver.Compiled`
+   artifact (``Compiled.explore``), or the constrained-best plan
+   compiled in place (the ``dse`` pass, ``dataflow_jit(..., dse=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from ..core.cdfg import CDFG
+from ..core.partition import (StagePlan, Partition, materialize,
+                              duplicate_cheap_rewrite, fused_plan,
+                              maximal_plan, neighbor_plans, plan_is_legal,
+                              plan_signature)
+from ..core.simulator import (MemAccess, MemoryModel, SimStage,
+                              standard_memory_models)
+from .options import ResourceConstraints
+from .schedule import _cyclic_nodes
+
+
+# ---------------------------------------------------------------------------
+# Enumeration
+# ---------------------------------------------------------------------------
+
+
+def enumerate_plans(cdfg: CDFG, base_plan: StagePlan,
+                    max_plans: int) -> list[tuple[tuple[str, ...],
+                                                  StagePlan]]:
+    """Breadth-first closure of the merge/split move set from
+    ``base_plan``, deduplicated by :func:`plan_signature` and capped at
+    ``max_plans``.  The fused and maximal degenerate plans are seeded
+    explicitly so they are reachable at any budget.  Returns
+    ``(moves, plan)`` pairs; the base plan is first with an empty move
+    list."""
+    from collections import deque
+
+    out: list[tuple[tuple[str, ...], StagePlan]] = [((), base_plan)]
+    seen = {plan_signature(base_plan)}
+    for tag, p in (("fused", fused_plan(base_plan)),
+                   ("maximal", maximal_plan(base_plan))):
+        sig = plan_signature(p)
+        if sig not in seen and plan_is_legal(cdfg, p):
+            seen.add(sig)
+            out.append(((tag,), p))
+    queue = deque([((), base_plan)])
+    while queue and len(out) < max_plans:
+        moves, plan = queue.popleft()
+        for tag, nb in neighbor_plans(plan):
+            sig = plan_signature(nb)
+            if sig in seen or not plan_is_legal(cdfg, nb):
+                continue
+            seen.add(sig)
+            rec = (moves + (tag,), nb)
+            out.append(rec)
+            queue.append(rec)
+            if len(out) >= max_plans:
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Resource model
+# ---------------------------------------------------------------------------
+
+
+def partition_resources(part: Partition, fifo_depth: int) -> dict:
+    """The resource footprint the constraints prune against: channel
+    payload bits, total FIFO storage at ``fifo_depth``, the widest
+    stage's memory-port count (one access interface per region), and the
+    §III-B1 duplication count (replica instances across stages)."""
+    channel_bits = sum(c.nbytes for c in part.channels) * 8
+    return {
+        "num_stages": len(part.stages),
+        "num_channels": len(part.channels),
+        "channel_bits": channel_bits,
+        "fifo_bits": fifo_depth * channel_bits,
+        "max_mem_ports": max((len(s.regions) for s in part.stages),
+                             default=0),
+        "duplicated_nodes": sum(len(v)
+                                for v in part.duplicated.values()),
+    }
+
+
+def constraint_violation(res: Mapping[str, int],
+                         rc: ResourceConstraints) -> str | None:
+    """First violated limit as a human-readable reason, or None."""
+    checks = (
+        ("fifo_bits", rc.max_fifo_bits),
+        ("max_mem_ports", rc.max_mem_ports_per_stage),
+        ("duplicated_nodes", rc.max_duplicated_nodes),
+        ("num_stages", rc.max_stages),
+    )
+    for field, limit in checks:
+        if limit is not None and res[field] > limit:
+            return f"{field} {res[field]} > {limit}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Candidate evaluation
+# ---------------------------------------------------------------------------
+
+
+def traces_by_node(cdfg: CDFG, base_partition: Partition,
+                   traces: Any = None, *, n_iters: int = 4096,
+                   seed: int = 0,
+                   address_space: int = 4 << 20) -> dict[int,
+                                                         list[MemAccess]]:
+    """Pin address traces to memory *nodes* so every candidate partition
+    sees identical traffic no matter how it groups the ops.
+
+    Deliberate deviation from ``Schedule.sim_stages``: that bridge
+    attaches traces per (stage, region), so merging two stages that
+    touch one region would *drop* traffic mid-search; here each memory
+    node keeps its stream across candidates (conserved traffic, honest
+    comparisons).  For kernels where several ops share a region the two
+    bridges therefore model different traffic — compare DSE cycles
+    against DSE cycles, not against ``Compiled.simulate()``.
+
+    Trace conventions accepted (same shapes as ``sim_stages``):
+
+    * ``None`` — synthetic uniform-random **byte** addresses, one stream
+      per region (the cache-hostile default);
+    * a mapping ``region -> MemAccess | [MemAccess]`` — a single trace
+      is shared by all of the region's ops; a list is assigned
+      positionally to the region's ops in node order;
+    * a sequence of :class:`MemAccess` — positional, over memory nodes
+      in the *baseline* partition's pipeline order (the Fig. 5
+      benchmark convention).
+    """
+    mem_nodes = [nid for st in base_partition.stages
+                 for nid in st.node_ids if cdfg.node(nid).is_memory]
+    out: dict[int, list[MemAccess]] = {}
+    if traces is not None and not isinstance(traces, Mapping):
+        # A shorter list leaves trailing memory ops traffic-less — the
+        # established ``sim_stages`` convention (the paper kernels
+        # supply one stream per *distinct* traffic source, not per op),
+        # applied identically to every candidate so comparisons stay
+        # apples-to-apples.
+        for nid, tr in zip(mem_nodes, list(traces)):
+            out[nid] = [tr]
+        return out
+    rng = np.random.default_rng(seed)
+    by_region: dict[str, Any] = dict(traces or {})
+    assigned: dict[str, int] = {}
+    for nid in mem_nodes:
+        region = cdfg.node(nid).region
+        if region is None:
+            continue
+        tr = by_region.get(region)
+        if tr is None and traces is None:
+            tr = MemAccess(region,
+                           rng.integers(0, address_space, n_iters) * 4)
+            by_region[region] = tr
+        if tr is None:
+            continue
+        if isinstance(tr, MemAccess):
+            out[nid] = [tr]
+        else:  # list: positional among the region's ops, last one reused
+            i = assigned.get(region, 0)
+            assigned[region] = i + 1
+            out[nid] = [tr[min(i, len(tr) - 1)]]
+    return out
+
+
+def sim_stages_for_partition(part: Partition,
+                             node_traces: Mapping[int, list[MemAccess]],
+                             cyclic_mem: set[int]) -> list[SimStage]:
+    """Cycle-simulator stage specs for one candidate partition: II and
+    latency from the materialized (and possibly duplicated-into) stages,
+    traces attached per memory node, ``mem_in_scc`` from the CDFG's
+    cyclic memory nodes (partition-independent)."""
+    out: list[SimStage] = []
+    for st in part.stages:
+        accs = [t for nid in st.node_ids
+                for t in node_traces.get(nid, ())]
+        out.append(SimStage(
+            name=f"s{st.id}",
+            ii=st.ii,
+            latency=max(1, st.latency),
+            accesses=accs,
+            mem_in_scc=bool(cyclic_mem & set(st.node_ids)),
+        ))
+    return out
+
+
+def evaluate_candidates(
+    stage_lists: Sequence[Sequence[SimStage]],
+    mem: MemoryModel,
+    n_iters: int,
+    *,
+    fifo_depth: int = 8,
+    seed: int = 0,
+    use_rescache: bool | None = None,
+    chunk_iters: int | None = None,
+) -> tuple[list[int], dict]:
+    """Simulate many candidate stage decompositions of *one* kernel in a
+    single chunk-major streaming pass.
+
+    Candidates are grouped by their per-op resolution key: each distinct
+    group resolves its traces once (served from the rescache when
+    possible, written back when not), and every candidate then only pays
+    the cheap per-stage fold plus its own wavefront solve.  Iterating
+    chunk-major keeps the per-trace window/burst memos hot, so sibling
+    candidates regenerate nothing.  Cycle counts are bit-identical to
+    stand-alone :func:`repro.core.simulator.simulate_dataflow` runs
+    (same canonical access order, same draw streams — asserted in
+    tests).  Returns ``(cycles per candidate, stats)``.
+    """
+    from ..core import rescache as _rc
+    from ..core.simulator import (DEFAULT_CHUNK_ITERS, _LaneSolver,
+                                  _OpFolder, _ResolvedChunk,
+                                  _SharedResolver, _fold_stage)
+    chunk_iters = chunk_iters or DEFAULT_CHUNK_ITERS
+    if n_iters <= 0 or not stage_lists:
+        return [0] * len(stage_lists), {"resolution_groups": 0,
+                                        "cold_groups": 0}
+    use_cache = _rc.enabled(use_rescache)
+    groups: dict[str, dict] = {}
+    gkeys: list[str] = []
+    for stages in stage_lists:
+        gkey = _rc.resolution_key("dataflow", stages, mem, seed, n_iters)
+        gkeys.append(gkey)
+        if gkey not in groups:
+            g: dict = {"stages": stages, "art": None, "resolver": None,
+                       "writer": None}
+            if use_cache:
+                g["art"] = _rc.get(gkey)
+            if g["art"] is None:
+                g["resolver"] = _SharedResolver(stages, {mem.name: mem},
+                                                seed)
+                if use_cache:
+                    g["writer"] = _rc.ArtifactWriter(
+                        gkey, g["resolver"].K, n_iters)
+            groups[gkey] = g
+    folders = [_OpFolder(st) for st in stage_lists]
+    solvers = [_LaneSolver(st, fifo_depth, collect_stalls=False)
+               for st in stage_lists]
+    for lo in range(0, n_iters, chunk_iters):
+        hi = min(lo + chunk_iters, n_iters)
+        n = hi - lo
+        zero = np.zeros(n, dtype=np.int32)
+        for g in groups.values():
+            if g["art"] is not None:
+                g["L"] = g["art"].chunk(lo, hi)
+            else:
+                g["spec_chunk"] = g["resolver"].resolve(lo, hi)[mem.name]
+                g["L"] = g["resolver"].last_ops[mem.name]
+                if g["writer"] is not None:
+                    g["writer"].add(g["L"])
+            # contiguous column views, shared by every candidate of the
+            # group this chunk
+            def _mk_col(L: np.ndarray, cc: dict) -> Any:
+                def col(k: int) -> np.ndarray:
+                    a = cc.get(k)
+                    if a is None:
+                        a = cc[k] = np.ascontiguousarray(L[:, k])
+                    return a
+                return col
+            g["col"] = _mk_col(g["L"], {})
+        # candidates mostly differ in one or two stages: fold each
+        # distinct (group, op set, ii, serialized) stage once per chunk
+        fold_cache: dict[tuple, tuple] = {}
+        for i, (folder, solver) in enumerate(zip(folders, solvers)):
+            g = groups[gkeys[i]]
+            if g["resolver"] is not None and g["stages"] is stage_lists[i]:
+                res = g["spec_chunk"]  # group spec: already folded
+            else:
+                bw = None
+                c_list, lat_list = [], []
+                for s, st in enumerate(stage_lists[i]):
+                    key = (gkeys[i], tuple(folder.stage_cols[s]), st.ii,
+                           st.mem_in_scc)
+                    hit = fold_cache.get(key)
+                    if hit is None:
+                        if bw is None:
+                            bw = folder.burst_words(lo, hi,
+                                                    mem.line_bytes)
+                        hit = _fold_stage(
+                            mem, st.ii, st.mem_in_scc,
+                            folder.stage_cols[s], g["col"], bw[s],
+                            folder.is_store, n, zero)
+                        fold_cache[key] = hit
+                    c_list.append(hit[0])
+                    lat_list.append(hit[1])
+                res = _ResolvedChunk(lo, hi, c_list, lat_list)
+            solver.solve_chunk(res)
+    for g in groups.values():
+        if g["writer"] is not None:
+            g["writer"].finish(*g["resolver"].cache_stats(mem.name))
+    stats = {"resolution_groups": len(groups),
+             "cold_groups": sum(1 for g in groups.values()
+                                if g["resolver"] is not None)}
+    return [int(s.last_finish) for s in solvers], stats
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DseCandidate:
+    """One explored (plan, duplicate-toggle) point."""
+
+    groups: tuple[tuple[int, ...], ...]   # plan signature (node-id groups)
+    moves: tuple[str, ...]
+    duplicate: bool
+    resources: dict
+    cycles: int | None = None             # None => pruned, not simulated
+    pruned: str | None = None
+    pareto: bool = False
+    compiled: Any = None                  # Compiled, attached on the front
+    plan: StagePlan | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def fifo_bits(self) -> int:
+        return self.resources["fifo_bits"]
+
+    def to_json(self) -> dict:
+        return {
+            "moves": list(self.moves),
+            "duplicate": self.duplicate,
+            "cycles": self.cycles,
+            "pruned": self.pruned,
+            "pareto": self.pareto,
+            **{k: self.resources[k]
+               for k in ("num_stages", "num_channels", "fifo_bits",
+                         "max_mem_ports", "duplicated_nodes")},
+        }
+
+
+@dataclasses.dataclass
+class DseResult:
+    """The explored partition space: every candidate, the baseline
+    (Algorithm 1 as configured), and the cycles-vs-FIFO-bits Pareto
+    front.  ``Compiled.explore`` attaches a full ``Compiled`` artifact
+    to each front candidate (``cand.compiled``)."""
+
+    baseline: DseCandidate
+    candidates: list[DseCandidate]
+    front: list[DseCandidate]
+    n_iters: int
+    fifo_depth: int
+    mem_name: str
+    wall_s: float = 0.0
+    rescache_hits: int = 0
+    rescache_misses: int = 0
+    #: from evaluate_candidates: distinct resolution groups / cold ones
+    eval_stats: dict = dataclasses.field(default_factory=dict)
+
+    def evaluated(self) -> list[DseCandidate]:
+        return [c for c in self.candidates if c.cycles is not None]
+
+    def best(self) -> DseCandidate:
+        """Feasible candidate minimizing (cycles, fifo_bits); the
+        baseline when nothing else was evaluated."""
+        ev = [c for c in self.evaluated() if c.pruned is None]
+        if not ev:
+            return self.baseline
+        return min(ev, key=lambda c: (c.cycles, c.fifo_bits))
+
+    def dominates_baseline(self) -> bool:
+        """Does some candidate strictly dominate Algorithm 1's plan —
+        fewer cycles at ≤ the FIFO bits, or ≤ cycles at fewer bits?"""
+        b = self.baseline
+        if b.cycles is None:
+            return bool(self.evaluated())
+        return any(
+            (c.cycles < b.cycles and c.fifo_bits <= b.fifo_bits)
+            or (c.cycles <= b.cycles and c.fifo_bits < b.fifo_bits)
+            for c in self.evaluated() if c is not b)
+
+    def to_json(self) -> dict:
+        return {
+            "n_iters": self.n_iters,
+            "fifo_depth": self.fifo_depth,
+            "mem": self.mem_name,
+            "wall_s": self.wall_s,
+            "rescache_hits": self.rescache_hits,
+            "rescache_misses": self.rescache_misses,
+            **self.eval_stats,
+            "dominates_baseline": self.dominates_baseline(),
+            "baseline": self.baseline.to_json(),
+            "best": self.best().to_json(),
+            "front": [c.to_json() for c in self.front],
+            "candidates": [c.to_json() for c in self.candidates],
+        }
+
+    def summary(self) -> str:
+        ev = self.evaluated()
+        lines = [
+            f"partition DSE: {len(self.candidates)} candidates "
+            f"({len(ev)} simulated at {self.n_iters} iters on "
+            f"{self.mem_name!r}, fifo_depth={self.fifo_depth}; "
+            f"rescache {self.rescache_hits} hits / "
+            f"{self.rescache_misses} misses)",
+            f"  baseline (Algorithm 1): {self.baseline.cycles} cycles @ "
+            f"{self.baseline.fifo_bits} FIFO bits, "
+            f"{self.baseline.resources['num_stages']} stages",
+        ]
+        for c in self.front:
+            tag = " <- baseline" if c is self.baseline else ""
+            lines.append(
+                f"  front: {c.cycles} cycles @ {c.fifo_bits} bits "
+                f"({c.resources['num_stages']} stages, dup="
+                f"{c.duplicate}, moves={'/'.join(c.moves) or 'none'})"
+                f"{tag}")
+        b = self.best()
+        lines.append(
+            f"  best: {b.cycles} cycles @ {b.fifo_bits} bits "
+            f"(moves={'/'.join(b.moves) or 'none'}, dup={b.duplicate})"
+            + ("  [strictly dominates Algorithm 1]"
+               if self.dominates_baseline() else ""))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The explorer
+# ---------------------------------------------------------------------------
+
+
+def explore_plans(
+    cdfg: CDFG,
+    base_plan: StagePlan,
+    *,
+    constraints: ResourceConstraints | None = None,
+    mem: MemoryModel | None = None,
+    node_traces: Mapping[int, list[MemAccess]] | None = None,
+    duplicate_base: bool = True,
+    n_iters: int | None = None,
+    fifo_depth: int | None = None,
+    seed: int | None = None,
+    max_candidates: int | None = None,
+    use_rescache: bool | None = None,
+) -> DseResult:
+    """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate)``
+    candidates (no ``Compiled`` construction — see
+    :func:`explore` / ``Compiled.explore`` for that layer)."""
+    from ..core import rescache as _rc
+    rc = constraints or ResourceConstraints()
+    n_iters = rc.n_iters if n_iters is None else n_iters
+    fifo_depth = rc.fifo_depth if fifo_depth is None else fifo_depth
+    seed = rc.seed if seed is None else seed
+    max_candidates = rc.max_candidates if max_candidates is None \
+        else max_candidates
+    if mem is None:
+        mem = standard_memory_models()[rc.mem]()
+    if node_traces is None:
+        node_traces = traces_by_node(
+            cdfg, materialize(cdfg, base_plan), None,
+            n_iters=n_iters, seed=seed)
+    cyclic = _cyclic_nodes(cdfg)
+    cyclic_mem = {nid for nid in cyclic if cdfg.node(nid).is_memory}
+    # the §III-B1 duplication rewrite is a per-candidate *move*, explored
+    # in both directions regardless of the base setting — forbid it
+    # outright with max_duplicated_nodes=0
+    dup_options = (duplicate_base, not duplicate_base)
+
+    stats0 = _rc.stats()
+    t0 = time.perf_counter()
+    plans = enumerate_plans(cdfg, base_plan, max_candidates)
+    candidates: list[DseCandidate] = []
+    baseline: DseCandidate | None = None
+    sim_list: list[tuple[DseCandidate, list[SimStage]]] = []
+    for moves, plan in plans:
+        if len(candidates) >= max_candidates and baseline is not None:
+            break
+        dup_effect = None
+        for dup in dup_options:
+            if len(candidates) >= max_candidates and baseline is not None:
+                break
+            part = materialize(cdfg, plan)
+            if dup:
+                duplicate_cheap_rewrite(part)
+                dup_effect = bool(part.duplicated)
+            if dup != dup_options[0] and not dup_effect:
+                # the rewrite is a no-op for this plan: the toggled
+                # variant would be byte-identical — don't burn budget
+                # (and a redundant solve) on it
+                continue
+            res = partition_resources(part, fifo_depth)
+            cand = DseCandidate(
+                groups=plan_signature(plan),
+                moves=moves + (() if dup == duplicate_base
+                               else ("duplicate" if dup
+                                     else "no-duplicate",)),
+                duplicate=dup, resources=res, plan=plan)
+            is_base = not moves and dup == duplicate_base
+            cand.pruned = constraint_violation(res, rc)
+            # the baseline is always simulated — it is the comparison
+            # point even when it violates the constraints
+            if cand.pruned is None or is_base:
+                sim_list.append((cand, sim_stages_for_partition(
+                    part, node_traces, cyclic_mem)))
+            if is_base:
+                baseline = cand
+            candidates.append(cand)
+    # one chunk-major pass simulates every survivor, sharing trace
+    # resolution across candidates (and with past/future runs via the
+    # per-op rescache)
+    cycles, eval_stats = evaluate_candidates(
+        [st for _, st in sim_list], mem, n_iters,
+        fifo_depth=fifo_depth, seed=seed, use_rescache=use_rescache)
+    for (cand, _), cyc in zip(sim_list, cycles):
+        cand.cycles = cyc
+    stats1 = _rc.stats()
+
+    # cycles-vs-FIFO-bits front over feasible evaluated candidates
+    front: list[DseCandidate] = []
+    best_cycles: int | None = None
+    pool = [c for c in candidates
+            if c.cycles is not None and c.pruned is None]
+    for c in sorted(pool, key=lambda c: (c.fifo_bits, c.cycles)):
+        if best_cycles is None or c.cycles < best_cycles:
+            best_cycles = c.cycles
+            c.pareto = True
+            front.append(c)
+    return DseResult(
+        baseline=baseline, candidates=candidates, front=front,
+        n_iters=n_iters, fifo_depth=fifo_depth, mem_name=mem.name,
+        wall_s=time.perf_counter() - t0,
+        rescache_hits=stats1["mem_hits"] + stats1["disk_hits"]
+        - stats0["mem_hits"] - stats0["disk_hits"],
+        rescache_misses=stats1["misses"] - stats0["misses"],
+        eval_stats=eval_stats)
+
+
+def compiled_with_plan(base: Any, plan: StagePlan,
+                       duplicate: bool) -> Any:
+    """Materialize a full ``Compiled`` artifact for one explored plan:
+    the front-end products (jaxpr, CDFG) are shared with ``base``, the
+    partition is rebuilt from ``plan``, and the decouple/schedule passes
+    re-run.  Bypasses the compile cache (candidate plans are not
+    reachable from options alone)."""
+    from .driver import Compiled
+    from .passes import CompileContext, DecouplePass, SchedulePass
+    opts = base.options.replace(duplicate_cheap=duplicate, dse=None)
+    ctx = CompileContext(fn=base.fn,
+                         example_args=base.context.example_args,
+                         options=opts)
+    ctx.closed_jaxpr = base.context.closed_jaxpr
+    ctx.out_tree = base.context.out_tree
+    ctx.cdfg = base.context.cdfg
+    ctx.plan = plan
+    part = materialize(ctx.cdfg, plan)
+    if duplicate:
+        duplicate_cheap_rewrite(part)
+    ctx.partition = part
+    DecouplePass().run(ctx)
+    SchedulePass().run(ctx)
+    return Compiled(ctx, base.pipeline)
+
+
+def explore(
+    compiled: Any,
+    *,
+    traces: Any = None,
+    constraints: ResourceConstraints | None = None,
+    mem: MemoryModel | None = None,
+    n_iters: int | None = None,
+    fifo_depth: int | None = None,
+    seed: int | None = None,
+    max_candidates: int | None = None,
+    use_rescache: bool | None = None,
+) -> DseResult:
+    """``Compiled.explore`` implementation: explore re-partitionings of
+    ``compiled``'s kernel and return the cycles-vs-FIFO-bits Pareto
+    front with a ``Compiled`` artifact attached to every front (and the
+    best) candidate."""
+    rc = constraints or compiled.options.dse or ResourceConstraints()
+    n_iters = rc.n_iters if n_iters is None else n_iters
+    seed = rc.seed if seed is None else seed
+    node_traces = traces_by_node(
+        compiled.cdfg, compiled.partition, traces,
+        n_iters=n_iters, seed=seed)
+    result = explore_plans(
+        compiled.cdfg, compiled.context.plan,
+        constraints=rc, mem=mem, node_traces=node_traces,
+        duplicate_base=compiled.options.duplicate_cheap,
+        n_iters=n_iters, fifo_depth=fifo_depth, seed=seed,
+        max_candidates=max_candidates, use_rescache=use_rescache)
+    for cand in {id(c): c for c in result.front + [result.best()]}.values():
+        if cand.compiled is None:
+            # the baseline IS the caller's artifact (same plan, same
+            # duplication setting) — no need to re-decouple/schedule
+            cand.compiled = compiled if cand is result.baseline \
+                else compiled_with_plan(compiled, cand.plan,
+                                        cand.duplicate)
+    return result

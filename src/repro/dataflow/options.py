@@ -21,6 +21,45 @@ def _freeze(value: Any) -> tuple:
 
 
 @dataclasses.dataclass(frozen=True)
+class ResourceConstraints:
+    """The resource model the partition-space DSE prunes against, plus
+    the exploration knobs the ``dse`` pass needs (frozen/hashable so it
+    can ride in :class:`CompileOptions` and the compile cache key).
+
+    Limits (``None`` = unconstrained):
+      ``max_fifo_bits``            — total FIFO storage across channels
+        (``fifo_depth × Σ channel payload bits``, the sweep's
+        ``fifo_bits`` metric).
+      ``max_mem_ports_per_stage``  — memory regions touched per stage
+        (the template gives every stage one access interface per region).
+      ``max_duplicated_nodes``     — §III-B1 duplication budget: total
+        replicas across stages (0 forbids the rewrite outright).
+      ``max_stages``               — stage count cap (area proxy).
+
+    Exploration knobs (used when the ``dse`` pass runs at compile time;
+    ``Compiled.explore`` accepts overrides):
+      ``n_iters``        — iterations simulated per candidate.
+      ``fifo_depth``     — FIFO depth candidates are costed/simulated at.
+      ``mem``            — memory-model name from
+        :func:`repro.core.simulator.standard_memory_models`.
+      ``max_candidates`` — enumeration budget (BFS over merge/split
+        moves from the Algorithm 1 plan; the fused and maximal
+        degenerate plans are always included).
+      ``seed``           — simulation seed.
+    """
+
+    max_fifo_bits: int | None = None
+    max_mem_ports_per_stage: int | None = None
+    max_duplicated_nodes: int | None = None
+    max_stages: int | None = None
+    n_iters: int = 4096
+    fifo_depth: int = 8
+    mem: str = "ACP"
+    max_candidates: int = 64
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class CompileOptions:
     """Everything that parameterizes a :func:`repro.dataflow.compile` run.
 
@@ -43,6 +82,13 @@ class CompileOptions:
       ``backend``        — default backend name for ``Compiled.__call__``.
       ``stream_argnums`` — argument positions that vary per microbatch when
         streaming through the systolic executors.
+
+    Design-space exploration:
+      ``dse`` — a :class:`ResourceConstraints` block.  When set, the
+        ``dse`` pass explores merge/split/duplicate re-partitionings of
+        the Algorithm 1 plan under these constraints (each candidate
+        fully simulated) and compiles the winner;
+        ``compiled.dse_result`` keeps the explored front.
     """
 
     policy: str = "paper"
@@ -57,6 +103,7 @@ class CompileOptions:
     loop: bool = False
     nonaliasing_carries: Any = ()
     stream_argnums: Any = (0,)
+    dse: ResourceConstraints | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "latency_table", _freeze(self.latency_table))

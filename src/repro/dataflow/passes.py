@@ -4,9 +4,11 @@ Each pass is a named object with a ``run(ctx)`` method that reads/writes
 fields of a shared :class:`CompileContext`.  The default pipeline mirrors
 the paper's flow —
 
-    trace → memdep → partition → rewrite → decouple → schedule
+    trace → memdep → partition → rewrite → dse → decouple → schedule
 
-— with each step delegating to the corresponding ``repro.core`` function
+(``dse`` is a no-op unless ``options.dse`` opts into partition-space
+exploration) — with each step delegating to the corresponding
+``repro.core`` function
 (the paper-faithful implementations stay in core; this module only
 orders and names them).  Pipelines are ordinary immutable value objects:
 ``default_pipeline().replace("partition", MyPartitionPass())`` swaps a
@@ -45,6 +47,7 @@ class CompileContext:
     partition: Any = None
     program: Any = None         # DecoupledProgram
     schedule: Schedule | None = None
+    dse_result: Any = None      # DseResult when the dse pass explored
     timings: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
@@ -132,6 +135,37 @@ class RewritePass(Pass):
             duplicate_cheap_rewrite(ctx.partition)
 
 
+class DsePass(Pass):
+    """Partition-space design-space exploration (no-op unless
+    ``options.dse`` is set): enumerate legal merge/split/duplicate
+    re-partitionings of the Algorithm 1 plan, prune against the
+    :class:`~repro.dataflow.options.ResourceConstraints` resource model,
+    simulate every survivor (synthetic per-region traces — supply real
+    traces through ``Compiled.explore``), and re-partition onto the
+    constrained-best candidate.  The full exploration is kept on
+    ``ctx.dse_result`` / ``Compiled.dse_result``."""
+
+    name = "dse"
+
+    def run(self, ctx: CompileContext) -> None:
+        rc = ctx.options.dse
+        if rc is None:
+            return
+        from . import dse as _dse
+        result = _dse.explore_plans(
+            ctx.cdfg, ctx.plan, constraints=rc,
+            duplicate_base=ctx.options.duplicate_cheap)
+        ctx.dse_result = result
+        best = result.best()
+        if best.plan is not None and best is not result.baseline:
+            from ..core.partition import (duplicate_cheap_rewrite,
+                                          materialize)
+            ctx.plan = best.plan
+            ctx.partition = materialize(ctx.cdfg, best.plan)
+            if best.duplicate:
+                duplicate_cheap_rewrite(ctx.partition)
+
+
 class DecouplePass(Pass):
     """Access/execute decoupling: one executable program per stage."""
 
@@ -217,4 +251,5 @@ class PassPipeline:
 
 def default_pipeline() -> PassPipeline:
     return PassPipeline((TracePass(), MemoryDepPass(), PartitionPass(),
-                         RewritePass(), DecouplePass(), SchedulePass()))
+                         RewritePass(), DsePass(), DecouplePass(),
+                         SchedulePass()))

@@ -291,7 +291,8 @@ def test_cache_miss_on_changed_shapes():
 
 def test_default_pipeline_names():
     assert default_pipeline().names() == [
-        "trace", "memdep", "partition", "rewrite", "decouple", "schedule"]
+        "trace", "memdep", "partition", "rewrite", "dse", "decouple",
+        "schedule"]
 
 
 def test_pipeline_pass_swap():

@@ -1,0 +1,401 @@
+"""Tests for the partition-space DSE pass (repro.dataflow.dse), the
+partition-rewrite correctness fixes that ride with it, and the Fig. 2
+schedule capture's move onto the resolution layer."""
+
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rescache as rc
+from repro.core.cdfg import CDFG, Node, Edge
+from repro.core.partition import (Partition, derive_channels,
+                                  duplicate_cheap_rewrite, fused_plan,
+                                  materialize, maximal_plan,
+                                  merge_costly_boundaries, merge_move,
+                                  neighbor_plans, partition_cdfg,
+                                  plan_is_legal, plan_signature, split_move,
+                                  stage_groups, _duplicate_cheap_sccs)
+from repro.core.simulator import (MemAccess, SimStage, acp, acp_cache,
+                                  simulate_dataflow)
+from repro.dataflow import (ResourceConstraints, compile as dcompile,
+                            enumerate_plans, explore_plans)
+from repro.dataflow.dse import (constraint_violation, partition_resources,
+                                sim_stages_for_partition, traces_by_node)
+
+
+@pytest.fixture()
+def rescache_on():
+    """The DSE sharing tests need the cache enabled (other test modules
+    may have disabled it globally); conftest already isolates the
+    directory."""
+    rc.clear()
+    rc.configure(enabled=True)
+    yield
+    rc.clear()
+    rc.configure(enabled=False)
+
+
+def _spmv_like():
+    def body(acc, j, vals, cols, xv):
+        return acc + vals[j] * xv[cols[j]]
+
+    vals = jnp.arange(64, dtype=jnp.float32)
+    cols = jnp.arange(64) % 16
+    xv = jnp.arange(16, dtype=jnp.float32)
+    args = (jnp.float32(0.0), jnp.int32(0), vals, cols, xv)
+    return body, args
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix 1: token edges count as feeders for §III-B1 duplication
+# ---------------------------------------------------------------------------
+
+
+def _fake_cdfg(nodes, edges):
+    """A minimal CDFG stand-in for partition-level unit tests (the
+    partitioner never touches eqns or jaxpr internals)."""
+    cdfg = types.SimpleNamespace(nodes=nodes, edges=edges)
+    by_id = {n.id: n for n in nodes}
+    cdfg.node = lambda nid: by_id[nid]
+    return cdfg
+
+
+def _node(nid, prim, *, memory=False, latency=1, region=None):
+    return Node(id=nid, prim=prim, eqn=None, is_memory=memory,
+                latency=latency, region=region)
+
+
+class _FakeVar:
+    """Hashable jaxpr-var stand-in with just enough aval for channels."""
+
+    def __init__(self):
+        self.aval = types.SimpleNamespace(shape=(),
+                                          dtype=np.dtype(np.float32))
+
+
+def _var():
+    return _FakeVar()
+
+
+def test_token_edge_feeder_blocks_duplication():
+    """A cheap node whose only input is an ordering token (the loop
+    counter's carry self-edge) must NOT be duplicated: the replica in
+    the consumer stage would silently drop the iteration ordering."""
+    v01, v02 = _var(), _var()
+    nodes = [_node(0, "add"), _node(1, "gather", memory=True, latency=2,
+                                    region="t"), _node(2, "add")]
+    edges = [
+        Edge(0, 0, None, "carry"),   # the token feeder under test
+        Edge(0, 2, v02, "data"),     # cross-stage consumer
+        Edge(1, 2, v01, "data"),
+    ]
+    cdfg = _fake_cdfg(nodes, edges)
+    plan = stage_groups(cdfg)
+    part = materialize(cdfg, plan)
+    assert part.stage_of_node[0] != part.stage_of_node[2]  # cross-stage
+    duplicate_cheap_rewrite(part)
+    assert 0 not in part.duplicated, \
+        "token-fed cheap node was duplicated (ordering dropped)"
+    # the identical graph minus the token edge IS duplicable (control)
+    cdfg2 = _fake_cdfg(nodes, edges[1:])
+    part2 = materialize(cdfg2, stage_groups(cdfg2))
+    duplicate_cheap_rewrite(part2)
+    assert 0 in part2.duplicated
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix 2: duplicated producers' latencies fold into consumers
+# ---------------------------------------------------------------------------
+
+
+def test_duplicated_latency_folds_into_consumer_stage():
+    def fn(table, idx, w):
+        j = idx + 1                      # cheap, invar-fed: duplicable
+        a = table[j]                     # gather -> stage cut
+        b = a * w                        # long mul -> stage cut
+        return b + j.astype(jnp.float32)
+
+    table = jnp.arange(32, dtype=jnp.float32)
+    cdfg = CDFG.from_function(fn, table, jnp.int32(3), jnp.float32(2.0))
+    part = partition_cdfg(cdfg)
+    assert part.duplicated, "expected the index add to be duplicated"
+    (nid, consumers), = part.duplicated.items()
+    dup_lat = cdfg.node(nid).latency
+    for sid in consumers:
+        st = part.stages[sid]
+        base = sum(cdfg.node(n).latency for n in st.node_ids)
+        assert st.latency == base + dup_lat, \
+            "consumer stage latency must include the duplicated op"
+    # idempotent: re-running the rewrite must not double-count
+    duplicate_cheap_rewrite(part)
+    st = part.stages[consumers[0]]
+    base = sum(cdfg.node(n).latency for n in st.node_ids)
+    assert st.latency == base + dup_lat
+
+
+# ---------------------------------------------------------------------------
+# Satellite: partition invariants under DSE moves
+# ---------------------------------------------------------------------------
+
+
+def _compiled_spmv():
+    body, args = _spmv_like()
+    return dcompile(body, *args, loop=True)
+
+
+def test_moves_preserve_invariants():
+    """Every enumerated candidate: SCCs intact, node set partitioned,
+    channels re-derived and forward-only."""
+    c = _compiled_spmv()
+    cdfg, base = c.cdfg, c.context.plan
+    plans = enumerate_plans(cdfg, base, 64)
+    assert len(plans) > 4
+    all_nodes = sorted(n.id for n in cdfg.nodes)
+    for moves, plan in plans:
+        assert plan_is_legal(cdfg, plan), moves
+        # SCC membership is identical across plans (never split)
+        for grp in plan.groups:
+            for k in grp:
+                assert plan.sccs[k] == base.sccs[k]
+        part = materialize(cdfg, plan)
+        seen = sorted(n for s in part.stages for n in s.node_ids)
+        assert seen == all_nodes, moves
+        assert part.channels == derive_channels(part)
+        for ch in part.channels:
+            assert ch.src_stage < ch.dst_stage, moves
+
+
+def test_fused_and_maximal_reachable_as_degenerate_points():
+    c = _compiled_spmv()
+    cdfg, base = c.cdfg, c.context.plan
+    sigs = {plan_signature(p) for _, p in enumerate_plans(cdfg, base, 256)}
+    assert plan_signature(stage_groups(cdfg, policy="fused")) in sigs
+    assert plan_signature(stage_groups(cdfg, policy="maximal")) in sigs
+    # and the helpers agree with the policies
+    assert plan_signature(fused_plan(base)) == \
+        plan_signature(stage_groups(cdfg, policy="fused"))
+    assert plan_signature(maximal_plan(base)) == \
+        plan_signature(stage_groups(cdfg, policy="maximal"))
+
+
+def test_split_then_merge_roundtrips():
+    c = _compiled_spmv()
+    base = c.context.plan
+    wide = [b for b, g in enumerate(base.groups) if len(g) > 1]
+    assert wide, "expected a multi-SCC stage in the Algorithm 1 plan"
+    b = wide[0]
+    split = split_move(base, b, 1)
+    assert plan_signature(merge_move(split, b)) == plan_signature(base)
+
+
+def test_cost_aware_merge_deterministic():
+    c = _compiled_spmv()
+    cdfg, base = c.cdfg, c.context.plan
+    a = merge_costly_boundaries(cdfg, base, 0)
+    b = merge_costly_boundaries(cdfg, base, 0)
+    assert plan_signature(a) == plan_signature(b)
+    assert plan_is_legal(cdfg, a)
+    # the merged plan is inside the move closure too
+    sigs = {plan_signature(p) for _, p in enumerate_plans(cdfg, base, 256)}
+    assert plan_signature(a) in sigs
+
+
+# ---------------------------------------------------------------------------
+# The explorer
+# ---------------------------------------------------------------------------
+
+
+def test_explore_front_artifacts_and_shared_resolution(rescache_on):
+    c = _compiled_spmv()
+    res = c.explore(n_iters=1500, max_candidates=12)
+    # baseline is the Algorithm 1 plan, always simulated
+    assert res.baseline.cycles is not None
+    assert res.baseline.groups == plan_signature(c.context.plan)
+    # the front is a proper Pareto set: bits ascending, cycles descending
+    bits = [f.fifo_bits for f in res.front]
+    cyc = [f.cycles for f in res.front]
+    assert bits == sorted(bits) and len(set(bits)) == len(bits)
+    assert cyc == sorted(cyc, reverse=True)
+    # every front point carries a full Compiled artifact that executes
+    body, args = _spmv_like()
+    expect = np.asarray(body(*args))
+    for f in res.front:
+        assert f.compiled is not None
+        assert f.compiled.num_stages == f.resources["num_stages"]
+        got = f.compiled(*args)
+        np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-6)
+    # candidate evaluations share resolution: all 12 candidates group
+    # onto a handful of distinct op signatures, each resolved once
+    evaluated = len(res.evaluated())
+    assert evaluated >= 8
+    assert res.eval_stats["resolution_groups"] <= 3
+    assert res.eval_stats["cold_groups"] <= res.eval_stats[
+        "resolution_groups"]
+    # a second exploration serves every group from the rescache
+    res2 = c.explore(n_iters=1500, max_candidates=12)
+    assert res2.eval_stats["cold_groups"] == 0
+    assert res2.rescache_hits >= res2.eval_stats["resolution_groups"]
+    assert [f.cycles for f in res2.front] == [f.cycles for f in res.front]
+
+
+def test_explore_cycles_bit_identical_to_fresh_simulation(rescache_on):
+    c = _compiled_spmv()
+    res = c.explore(n_iters=1200, max_candidates=10)
+    nt = traces_by_node(c.cdfg, c.partition, None, n_iters=1200, seed=0)
+    from repro.dataflow.schedule import _cyclic_nodes
+    cyc_mem = {n for n in _cyclic_nodes(c.cdfg)
+               if c.cdfg.node(n).is_memory}
+    for cand in res.front:
+        stages = sim_stages_for_partition(cand.compiled.partition, nt,
+                                          cyc_mem)
+        fresh = simulate_dataflow(stages, acp(), 1200, fifo_depth=8,
+                                  collect_stalls=False,
+                                  use_rescache=False)
+        assert fresh.cycles == cand.cycles
+
+
+def test_constraints_prune_before_simulation():
+    c = _compiled_spmv()
+    limit = 64
+    res = explore_plans(
+        c.cdfg, c.context.plan,
+        constraints=ResourceConstraints(max_fifo_bits=limit, n_iters=800,
+                                        max_candidates=12))
+    for cand in res.candidates:
+        if cand is res.baseline:
+            continue  # baseline is simulated even when infeasible
+        if cand.pruned is not None:
+            assert cand.cycles is None
+    for cand in res.front:
+        assert cand.fifo_bits <= limit
+    assert res.best().fifo_bits <= limit or res.best() is res.baseline
+    # stage-count constraint prunes by a different axis
+    res2 = explore_plans(
+        c.cdfg, c.context.plan,
+        constraints=ResourceConstraints(max_stages=2, n_iters=800,
+                                        max_candidates=12))
+    for cand in res2.front:
+        assert cand.resources["num_stages"] <= 2
+    viol = constraint_violation({"fifo_bits": 10, "max_mem_ports": 3,
+                                 "duplicated_nodes": 0, "num_stages": 4},
+                                ResourceConstraints(
+                                    max_mem_ports_per_stage=2))
+    assert viol == "max_mem_ports 3 > 2"
+
+
+def test_dse_pass_compiles_constrained_winner():
+    body, args = _spmv_like()
+    rcon = ResourceConstraints(max_fifo_bits=2048, n_iters=1000,
+                               max_candidates=10)
+    c = dcompile(body, *args, loop=True, dse=rcon)
+    assert c.dse_result is not None
+    best = c.dse_result.best()
+    assert partition_resources(
+        c.partition, rcon.fifo_depth)["fifo_bits"] <= 2048 \
+        or best is c.dse_result.baseline
+    # re-partitioned program still computes the right thing
+    got = c(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(body(*args)),
+                               rtol=1e-6)
+    # no-op without options.dse
+    c2 = dcompile(body, *args, loop=True)
+    assert c2.dse_result is None
+
+
+def test_duplication_budget_is_a_move():
+    """max_duplicated_nodes=0 forbids the §III-B1 rewrite: every
+    feasible candidate must be duplication-free."""
+    def fn(table, idx, w):
+        j = idx + 1
+        a = table[j]
+        b = a * w
+        return b + j.astype(jnp.float32)
+
+    table = jnp.arange(32, dtype=jnp.float32)
+    c = dcompile(fn, table, jnp.int32(3), jnp.float32(2.0))
+    assert c.partition.duplicated  # the default plan duplicates
+    res = explore_plans(
+        c.cdfg, c.context.plan,
+        constraints=ResourceConstraints(max_duplicated_nodes=0,
+                                        n_iters=500, max_candidates=12))
+    feasible = [cand for cand in res.candidates if cand.pruned is None]
+    assert feasible
+    assert all(cand.resources["duplicated_nodes"] == 0
+               for cand in feasible)
+    assert any(not cand.duplicate for cand in feasible)
+    # ...and the toggle works in the other direction too: a base compile
+    # without the rewrite still explores duplicated candidates
+    c2 = dcompile(fn, table, jnp.int32(3), jnp.float32(2.0),
+                  duplicate_cheap=False)
+    res2 = explore_plans(
+        c2.cdfg, c2.context.plan,
+        constraints=ResourceConstraints(n_iters=500, max_candidates=12),
+        duplicate_base=False)
+    assert any(cand.duplicate and "duplicate" in cand.moves
+               for cand in res2.candidates)
+
+
+def test_traces_by_node_conventions():
+    c = _compiled_spmv()
+    mem_nodes = [nid for st in c.partition.stages for nid in st.node_ids
+                 if c.cdfg.node(nid).is_memory]
+    # positional sequence: one trace per memory node, pipeline order
+    seq = [MemAccess(f"t{i}", np.arange(100) * 4)
+           for i in range(len(mem_nodes))]
+    nt = traces_by_node(c.cdfg, c.partition, seq, n_iters=100)
+    assert [nt[nid][0].region for nid in mem_nodes] == \
+        [f"t{i}" for i in range(len(mem_nodes))]
+    # region mapping: the region's ops share the trace
+    regions = {c.cdfg.node(nid).region for nid in mem_nodes}
+    mapping = {r: MemAccess(r, np.arange(64) * 4) for r in regions}
+    nt2 = traces_by_node(c.cdfg, c.partition, mapping, n_iters=64)
+    for nid in mem_nodes:
+        assert nt2[nid][0].region == c.cdfg.node(nid).region
+    # None: synthetic per-region traces, deterministic in the seed
+    nt3 = traces_by_node(c.cdfg, c.partition, None, n_iters=64, seed=7)
+    nt4 = traces_by_node(c.cdfg, c.partition, None, n_iters=64, seed=7)
+    for nid in mem_nodes:
+        np.testing.assert_array_equal(nt3[nid][0].addrs,
+                                      nt4[nid][0].addrs)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: Fig. 2 schedule capture on the resolution layer
+# ---------------------------------------------------------------------------
+
+
+def test_return_schedule_matches_scalar_path_and_hits_rescache(
+        rescache_on):
+    rng = np.random.default_rng(0)
+    n = 400
+    stages = [
+        SimStage("idx", ii=1, latency=2,
+                 accesses=[MemAccess("cols", np.arange(n) * 4)]),
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x",
+                                     rng.integers(0, 4 << 20, n) * 4)]),
+        SimStage("fma", ii=6, latency=8),
+        SimStage("store", ii=1, latency=2,
+                 accesses=[MemAccess("y", np.arange(n) * 4,
+                                     is_store=True)]),
+    ]
+    for mk in (acp, acp_cache):
+        ref, s_ref, f_ref = simulate_dataflow(
+            stages, mk(), n, reference=True, return_schedule=True)
+        new, s_new, f_new = simulate_dataflow(
+            stages, mk(), n, return_schedule=True)
+        np.testing.assert_array_equal(s_ref, s_new)
+        np.testing.assert_array_equal(f_ref, f_new)
+        assert ref.cycles == new.cycles
+        assert ref.stage_stall_cycles == new.stage_stall_cycles
+        assert (ref.cache_hits, ref.cache_misses) == \
+            (new.cache_hits, new.cache_misses)
+    # the schedule path stored artifacts; a rerun serves from the cache
+    before = rc.stats()["mem_hits"]
+    again, s2, _ = simulate_dataflow(stages, acp_cache(), n,
+                                     return_schedule=True)
+    assert rc.stats()["mem_hits"] > before
+    np.testing.assert_array_equal(s2, s_new)
+    assert again.cycles == new.cycles

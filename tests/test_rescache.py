@@ -82,8 +82,11 @@ def test_cached_vs_uncached_identical(cache_dir):
 
 
 def test_key_invalidates_on_model_and_seed(cache_dir):
-    """Any memory-model field or the seed must change the key (no false
-    sharing); the model's *name* must not (content addressing)."""
+    """Every memory-model field that reaches the resolved per-access
+    latencies must change the key (no false sharing); the model's *name*
+    and the fold-only fields (bandwidth, outstanding cap, posted writes
+    for the dataflow engine) must not — those variants legitimately share
+    one per-op artifact."""
     stages = _pipeline(seed=7)
     base = acp()
     key0 = rc.resolution_key("dataflow", stages, base, 0, 1000)
@@ -93,13 +96,23 @@ def test_key_invalidates_on_model_and_seed(cache_dir):
     assert rc.resolution_key("dataflow", stages, base, 1, 1000) != key0
     assert rc.resolution_key("dataflow", stages, base, 0, 999) != key0
     for field, value in [("port_latency", 26), ("dram_latency", 66),
-                         ("backing_hit_rate", 0.5),
-                         ("words_per_cycle", 0.5), ("max_outstanding", 4),
-                         ("posted_writes", False)]:
+                         ("backing_hit_rate", 0.5)]:
         m = acp()
         setattr(m, field, value)
         assert rc.resolution_key("dataflow", stages, m, 0, 1000) != key0, \
             field
+    # fold-only fields share the artifact (v2 per-op keying)
+    for field, value in [("words_per_cycle", 0.5), ("max_outstanding", 4),
+                         ("posted_writes", False)]:
+        m = acp()
+        setattr(m, field, value)
+        assert rc.resolution_key("dataflow", stages, m, 0, 1000) == key0, \
+            field
+    # ...but posted_writes keys the conventional engine's stall summary
+    m = acp()
+    m.posted_writes = False
+    assert rc.resolution_key("conventional", stages, m, 0, 1000) != \
+        rc.resolution_key("conventional", stages, acp(), 0, 1000)
     m = acp_cache()
     k1 = rc.resolution_key("dataflow", stages, m, 0, 1000)
     assert k1 != key0
@@ -109,11 +122,23 @@ def test_key_invalidates_on_model_and_seed(cache_dir):
     # trace content is part of the key
     other = _pipeline(seed=8)
     assert rc.resolution_key("dataflow", other, base, 0, 1000) != key0
-    # stage latency is NOT: it never reaches the resolved arrays
+    # stage latency and II are NOT: they never reach the resolved arrays,
+    # and neither is the stage *grouping* — regrouping the same ops in the
+    # same stream order (a DSE merge) shares the artifact
     relat = _pipeline(seed=7)
     for st in relat:
         st.latency += 3
+        st.ii += 2
     assert rc.resolution_key("dataflow", relat, base, 0, 1000) == key0
+    merged = [SimStage("m", ii=1, latency=5,
+                       accesses=[a for st in _pipeline(seed=7)
+                                 for a in st.accesses])]
+    assert rc.resolution_key("dataflow", merged, base, 0, 1000) == key0
+    # a serialized (mem-in-SCC) op resolves differently: key must differ
+    ser = _pipeline(seed=7)
+    ser[0] = SimStage(ser[0].name, ii=ser[0].ii, latency=ser[0].latency,
+                      accesses=ser[0].accesses, mem_in_scc=True)
+    assert rc.resolution_key("dataflow", ser, base, 0, 1000) != key0
 
 
 def test_trace_fingerprint_generated_vs_materialized():
