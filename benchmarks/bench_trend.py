@@ -35,7 +35,8 @@ WALL_FLOOR_S = 30.0  # don't gate walls this short: runner noise 2x's them
 def _sweep_key(row: dict) -> tuple:
     return (row.get("kernel"), row.get("mem"), row.get("fifo_depth"),
             row.get("mem_in_scc"), row.get("words_per_cycle"),
-            row.get("max_outstanding"), row.get("n_iters"))
+            row.get("max_outstanding"), row.get("n_iters"),
+            row.get("trace_set"))
 
 
 def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
@@ -92,6 +93,10 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
 
     # --- partition-space DSE ------------------------------------------------
     pd, cd = prev.get("dse"), cur.get("dse")
+    if pd and cd and pd.get("trace_set") != cd.get("trace_set"):
+        notes.append("dse: trace-set change (smoke now prefixes the "
+                     "full-scale traces), comparison reset")
+        pd = None
     if pd and cd and pd.get("smoke") == cd.get("smoke"):
         for kn, cr in cd.get("kernels", {}).items():
             pr = pd.get("kernels", {}).get(kn)
@@ -113,6 +118,27 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                     f"no longer does")
     elif pd and cd:
         notes.append("dse: smoke/full mismatch, skipped")
+
+    # --- chunk-graph worker scaling ----------------------------------------
+    pw, cw = prev.get("worker_scaling"), cur.get("worker_scaling")
+    if cw:
+        if cw.get("identical") is False:
+            failures.append(
+                "worker_scaling: sharded and streaming runs disagree "
+                "on cycle counts — the chunk-graph executor must be "
+                "bit-identical")
+        if pw and pw.get("n_iters") == cw.get("n_iters"):
+            p1, c1 = pw.get("workers1_s"), cw.get("workers1_s")
+            # same short-wall floor as every other gate here: runner
+            # noise routinely doubles second-scale timings
+            if p1 and c1 and p1 >= WALL_FLOOR_S and c1 / p1 > WALL_TOL:
+                failures.append(
+                    f"worker_scaling workers1_s: {p1:.1f} -> {c1:.1f} "
+                    f"({c1 / p1:.1f}x) — the streaming path regressed")
+            ps, cs = pw.get("speedup"), cw.get("speedup")
+            if ps and cs and pw.get("cpus") == cw.get("cpus"):
+                notes.append(f"worker scaling on {cw.get('cpus')} cpus: "
+                             f"{ps:.2f}x -> {cs:.2f}x")
 
     # --- vectorized-engine throughput --------------------------------------
     # gate on the reference-vs-vectorized *speedup ratio* rather than raw

@@ -86,7 +86,11 @@ def build_stages(k: PaperKernel, *, full: bool = True):
         k.loop_body, k.carry_example, *k.body_args,
         loop=True,
         nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
-    traces = k.full_traces if full else k.traces
+    del full  # --quick truncates the iteration count, not the traces:
+    # both modes attach the full-scale windowed traces, so a --quick run
+    # is an exact *prefix* of the full run and the v3 rescache serves it
+    # from any full-scale artifact with zero cold resolution
+    traces = k.full_traces
     df_stages = compiled.sim_stages(traces=list(traces.values()))
     return df_stages, [fused_stage(df_stages)]
 
@@ -103,7 +107,7 @@ def run_kernel(k: PaperKernel, *, full: bool = False) -> dict:
     pre-sweep behaviour); ``full=True`` simulates all Table-I iterations.
     """
     n = k.n_iters_full if full else k.n_iters_sim
-    traces = k.full_traces if full else k.traces
+    traces = k.full_traces
     df_stages, conv_stages = build_stages(k, full=full)
     base = simulate_processor(k.instrs_per_iter, list(traces.values()), n)
     t_base = base.runtime_s if full else base.scaled_runtime(k.n_iters_full)
@@ -137,12 +141,13 @@ def run_kernel(k: PaperKernel, *, full: bool = False) -> dict:
 def _sim_task(task: tuple) -> tuple:
     """One (kernel, machine) group: all four memory configs resolved in a
     single shared pass — a top-level function so a spawn-based process
-    pool can run the grid."""
-    kname, what, full = task
+    pool can run the grid.  ``workers > 1`` additionally shards the
+    dataflow group's resolution over the chunk-graph executor."""
+    kname, what, full, workers = task
     t0 = time.perf_counter()
     k = _make_kernel(kname)
     n = k.n_iters_full if full else k.n_iters_sim
-    traces = k.full_traces if full else k.traces
+    traces = k.full_traces
     if what == "processor":
         r = {"": simulate_processor(k.instrs_per_iter,
                                     list(traces.values()), n)}
@@ -150,7 +155,8 @@ def _sim_task(task: tuple) -> tuple:
         df_stages, _ = build_stages(k, full=full)
         grid = simulate_dataflow_many(df_stages, _dataflow_mems(), n,
                                       fifo_depths=(FIFO_DEPTH,),
-                                      collect_stalls=False)
+                                      collect_stalls=False,
+                                      workers=workers)
         r = {mn: grid[(mn, FIFO_DEPTH)] for mn in MEM_NAMES}
     else:
         _, conv_stages = build_stages(k, full=full)
@@ -166,14 +172,18 @@ _MACHINE_WEIGHT = {"dataflow": 3.0, "conventional": 1.2, "processor": 1.0}
 
 def run_all(*, full: bool = True, jobs: int | None = None,
             kernels: tuple[str, ...] | None = None,
-            ) -> tuple[dict, dict, int]:
+            workers: int | None = None,
+            ) -> tuple[dict, dict, int, int]:
     """The full grid; returns (per-kernel results, per-task seconds,
-    resolved worker count)."""
+    resolved job count, resolved per-task resolution workers).
+
+    ``workers`` shards each dataflow task's trace resolution over the
+    chunk-graph executor (default: leftover cores after the task pool,
+    so ≥8-core machines shard the Floyd–Warshall tail instead of
+    idling behind one bandwidth-bound worker; resolves to 1 — the
+    streaming engine, no extra processes — on the 2-core CI
+    container)."""
     kernels = tuple(kernels or ALL_KERNELS)
-    tasks = [(kn, what, full) for kn in kernels
-             for what in ("dataflow", "conventional", "processor")]
-    tasks.sort(key=lambda t: -(_make_kernel(t[0]).n_iters_full if full
-                               else 1) * _MACHINE_WEIGHT[t[1]])
     if jobs is None:
         # one extra worker over the core count: the three Floyd–Warshall
         # machine groups are near-equal, so exact 2-way packing wastes a
@@ -181,6 +191,21 @@ def run_all(*, full: bool = True, jobs: int | None = None,
         # interleave them and the wall approaches total-CPU / cores
         jobs = min(multiprocessing.cpu_count() + 1, 4) if full \
             else min(2, multiprocessing.cpu_count())
+    if workers is None:
+        # the grid's wall clock IS the Floyd–Warshall dataflow task
+        # (everything else overlaps under it — see task_s in
+        # BENCH_sim.json), so on ≥4 cores always shard it: early in the
+        # run the extra worker processes time-share with the other
+        # tasks, and once only the tail task remains its workers own
+        # the freed cores.  Below 4 cores the streaming engine wins
+        # (sharding pays a second cache replay per chunk).
+        cpus = multiprocessing.cpu_count()
+        workers = 1 if (not full or cpus < 4) \
+            else max(2, cpus // max(1, jobs))
+    tasks = [(kn, what, full, workers) for kn in kernels
+             for what in ("dataflow", "conventional", "processor")]
+    tasks.sort(key=lambda t: -(_make_kernel(t[0]).n_iters_full if full
+                               else 1) * _MACHINE_WEIGHT[t[1]])
     sims: dict[tuple, object] = {}
     task_s: dict[str, float] = {}
     pool = (multiprocessing.get_context("spawn").Pool(jobs)
@@ -228,7 +253,7 @@ def run_all(*, full: bool = True, jobs: int | None = None,
                 "dataflow_vs_conventional": t_cv / t_df,
             }
         results_out[kn] = out
-    return results_out, task_s, jobs
+    return results_out, task_s, jobs, workers
 
 
 def summarize(results: dict) -> dict:
@@ -281,7 +306,7 @@ def _rescache_disk_stats() -> dict:
 def main(out_path: str | None = "experiments/paper_fig5.json",
          *, quick: bool = False, jobs: int | None = None,
          kernels: tuple[str, ...] | None = None,
-         rescache: bool = True) -> dict:
+         rescache: bool = True, workers: int | None = None) -> dict:
     if not rescache:
         # spawn-pool workers inherit the environment, not configure()
         os.environ["REPRO_RESCACHE"] = "0"
@@ -292,8 +317,8 @@ def main(out_path: str | None = "experiments/paper_fig5.json",
             else "extrapolated from a small window (--quick)")
     print(f"Fig. 5 grid — {mode}")
     t0 = time.perf_counter()
-    results, task_s, jobs_used = run_all(full=full, jobs=jobs,
-                                         kernels=kernels)
+    results, task_s, jobs_used, workers_used = run_all(
+        full=full, jobs=jobs, kernels=kernels, workers=workers)
     wall_s = time.perf_counter() - t0
     summary = summarize(results)
     print(f"\n{'kernel':<16}{'mem':<10}{'conv/base':>10}{'df/base':>10}"
@@ -321,6 +346,7 @@ def main(out_path: str | None = "experiments/paper_fig5.json",
         update_bench("fig5_wallclock", {
             "wall_s": wall_s,
             "jobs": jobs_used,
+            "resolution_workers": workers_used,
             "task_s": task_s,
             "rescache": rescache,
             "rescache_stats": _rc.stats(),  # parent process; workers own
@@ -348,10 +374,14 @@ def cli() -> dict:
     ap.add_argument("--out", default="experiments/paper_fig5.json")
     ap.add_argument("--no-rescache", action="store_true",
                     help="bypass the resolved-trace cache (cold timings)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shard each dataflow task's resolution over N "
+                         "processes (chunk-graph executor; default: "
+                         "leftover cores after the task pool)")
     a, _ = ap.parse_known_args()
     return main(a.out, quick=a.quick, jobs=a.jobs,
                 kernels=tuple(a.kernels) if a.kernels else None,
-                rescache=not a.no_rescache)
+                rescache=not a.no_rescache, workers=a.workers)
 
 
 if __name__ == "__main__":

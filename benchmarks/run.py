@@ -9,11 +9,18 @@
             ``run.py sweep --smoke``)
 
 Both fig5 and sweep memoize resolved traces under
-``experiments/.rescache`` (in-process LRU + on-disk store shared across
-grid cells, chunk sizes, and worker processes).  Pass ``--no-rescache``
-after the section name to force cold resolution — e.g.
-``run.py fig5 --no-rescache`` — for timing runs or when a trace
-generator changed without changing its fingerprinted sample.
+``experiments/.rescache`` (chunk-granular records in an in-process LRU
++ on-disk store, shared across grid cells, chunk sizes, iteration
+counts — an N-iteration artifact prefix-serves any shorter run, so
+``fig5 --quick`` after a full run resolves nothing — and worker
+processes; interrupted runs resume from their last completed chunk).
+Pass ``--no-rescache`` after the section name to force cold
+resolution — e.g. ``run.py fig5 --no-rescache`` — for timing runs or
+when a trace generator changed without changing its fingerprinted
+sample; ``--workers N`` shards each dataflow task's resolution over
+the chunk-graph process pool (bit-identical; pays off from ~4 cores
+up).  ``python -c "from repro.core import rescache; rescache.gc()"``
+clears pre-v3 orphans and enforces ``$REPRO_RESCACHE_MAX_BYTES``.
   table2  — Table II analogue (stage/channel/duplication accounting)
   kernels — Pallas-kernel micro-bench CSV (name,us_per_call,derived)
   roofline— the (arch × shape) table from dry-run artifacts (if present)

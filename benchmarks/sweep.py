@@ -116,12 +116,17 @@ def _sweep_task(task: tuple) -> list[dict]:
     resolution across FIFO depths / SCC modes / port-knob variants (one
     streaming pass per SCC mode), and the resolved traces are memoized
     on disk so tasks in sibling processes — and later ``paper_fig5``
-    runs — share with this one."""
+    runs — share with this one.  Reduced (``--smoke``) runs use the
+    *full-scale* traces at a truncated iteration count, so the v3
+    rescache prefix-serves them from any full-scale run's artifacts —
+    and every row records ``n_iters_requested`` (the Table-I count) vs
+    ``n_iters_simulated`` so trend comparisons never silently mix
+    scales."""
     (kname, mem_name, fifo_depths, scc_modes, n_iters,
-     wpcs, mos) = task
+     wpcs, mos, workers) = task
     k = _make_kernel(kname)
     n = n_iters or k.n_iters_full
-    traces = k.full_traces if n_iters is None else k.traces
+    traces = k.full_traces
     compiled = dataflow_compile(
         k.loop_body, k.carry_example, *k.body_args, loop=True,
         nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
@@ -130,12 +135,51 @@ def _sweep_task(task: tuple) -> list[dict]:
                          fifo_depths=fifo_depths, scc_modes=scc_modes,
                          traces=list(traces.values()),
                          max_outstanding=MAX_OUTSTANDING,
-                         words_per_cycle=wpcs, max_outstandings=mos)
+                         words_per_cycle=wpcs, max_outstandings=mos,
+                         workers=workers)
     for row in res.rows:
         row["kernel"] = kname
         row["n_iters"] = n
-        row["fully_simulated"] = n_iters is None
+        row["n_iters_requested"] = k.n_iters_full
+        row["n_iters_simulated"] = n
+        row["fully_simulated"] = n == k.n_iters_full
+        row["trace_set"] = "full"
     return res.rows
+
+
+def measure_worker_scaling(n: int | None = None) -> dict:
+    """The chunk-graph worker-scaling probe: one fixed cached-model
+    pipeline resolved cold by the streaming engine (``--workers 1``)
+    and by the sharded executor at all cores, identical cycles
+    asserted.  Recorded in ``BENCH_sim.json`` (``worker_scaling``) and
+    trend-gated: the workers=1 wall must never regress, and the two
+    modes must agree bit-for-bit — the speedup column documents what
+    sharding buys on this machine (≥4-core boxes; a 2-core container
+    pays the double replay with no spare cores)."""
+    from repro.core import rescache as _rc
+    from repro.core.simulator import simulate_dataflow_many
+    if n is None:
+        n = 4 * _rc.CHUNK_ITERS  # enough chunks for the pool to engage
+    stages = _perf_pipeline(n)
+    cpus = multiprocessing.cpu_count()
+    out = {"n_iters": n, "cpus": cpus}
+    mems = standard_memory_models()
+    t0 = time.perf_counter()
+    r1 = simulate_dataflow_many(
+        stages, {"ACP+64KB": mems["ACP+64KB"]()}, n, fifo_depths=(64,),
+        collect_stalls=False, use_rescache=False)
+    out["workers1_s"] = time.perf_counter() - t0
+    w = max(2, cpus)
+    t0 = time.perf_counter()
+    rw = simulate_dataflow_many(
+        stages, {"ACP+64KB": mems["ACP+64KB"]()}, n, fifo_depths=(64,),
+        collect_stalls=False, use_rescache=False, workers=w)
+    out["workers_all_s"] = time.perf_counter() - t0
+    out["workers_all"] = w
+    out["identical"] = all(rw[key].cycles == r1[key].cycles
+                           for key in r1)
+    out["speedup"] = out["workers1_s"] / max(1e-9, out["workers_all_s"])
+    return out
 
 
 def run_dse(*, smoke: bool = False,
@@ -169,12 +213,13 @@ def run_dse(*, smoke: bool = False,
         kernels = tuple(kernels or ("spmv",))
         n_iters, fifo_depth = None, FIFO_DEPTH
     payload: dict = {"smoke": smoke, "fifo_depth": fifo_depth,
-                     "max_candidates": max_candidates, "kernels": {}}
+                     "max_candidates": max_candidates,
+                     "trace_set": "full", "kernels": {}}
     t0 = time.perf_counter()
     for kn in kernels:
         k = _make_kernel(kn)
         n = n_iters or k.n_iters_full
-        traces = k.traces if n_iters is not None else k.full_traces
+        traces = k.full_traces
         compiled = dataflow_compile(
             k.loop_body, k.carry_example, *k.body_args, loop=True,
             nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
@@ -206,7 +251,7 @@ def run_dse(*, smoke: bool = False,
             # serve would fake the meter) and the store keeps only
             # artifacts real sweeps reuse
             _rc.evict(_rc.resolution_key("dataflow", base_stages, mem,
-                                         probe_seed, n))
+                                         probe_seed))
         cold_s = sorted(colds)[1]
         te = time.perf_counter()
         res = compiled.explore(
@@ -236,7 +281,8 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
               out_path: str = BENCH_PATH,
               words_per_cycle: tuple[float, ...] | None = None,
               max_outstandings: tuple[int, ...] | None = None,
-              rescache: bool = True) -> dict:
+              rescache: bool = True,
+              workers: int | None = None) -> dict:
     from .paper_kernels import ALL_KERNELS
     if not rescache:
         os.environ["REPRO_RESCACHE"] = "0"  # spawn workers inherit env
@@ -254,7 +300,7 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
         mems = tuple(standard_memory_models())
         fifo_depths, scc_modes, n_iters = FIFO_DEPTHS, SCC_MODES, None
     tasks = [(kn, mn, fifo_depths, scc_modes, n_iters,
-              words_per_cycle, max_outstandings)
+              words_per_cycle, max_outstandings, workers)
              for kn in kernels for mn in mems]
     if jobs is None:
         jobs = 1 if smoke else min(2, multiprocessing.cpu_count())
@@ -292,10 +338,17 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
              "dataflow_cycles": r["dataflow_cycles"]}
             for r in front]
     perf = measure_perf()
+    scaling = measure_worker_scaling()
     payload = {"smoke": smoke, "wall_s": time.perf_counter() - t0,
-               "rows": rows, "pareto": fronts}
+               "workers": workers, "rows": rows, "pareto": fronts}
     update_bench("sweep", payload, out_path)
     update_bench("perf", perf, out_path)
+    update_bench("worker_scaling", scaling, out_path)
+    print(f"worker scaling: workers=1 {scaling['workers1_s']:.1f}s, "
+          f"workers={scaling['workers_all']} "
+          f"{scaling['workers_all_s']:.1f}s "
+          f"({scaling['speedup']:.2f}x, identical="
+          f"{scaling['identical']}) on {scaling['cpus']} cpus")
     print(f"\n{'kernel':<16}{'mem':<10}{'fifo':>5}{'wpc':>5}{'mo':>4}"
           f"{'df cyc/it':>11}{'conv cyc/it':>13}{'speedup':>9}")
     for r in rows:
@@ -323,6 +376,10 @@ def main() -> dict:
                     default=None, help="in-flight request cap axis values")
     ap.add_argument("--no-rescache", action="store_true",
                     help="bypass the resolved-trace cache (cold timings)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shard trace resolution over N processes per "
+                         "sweep task (the chunk-graph executor; "
+                         "bit-identical results)")
     ap.add_argument("--dse", action="store_true",
                     help="also run the partition-space DSE and record "
                          "the Pareto fronts in BENCH_sim.json")
@@ -340,7 +397,8 @@ def main() -> dict:
                                          if a.words_per_cycle else None),
                         max_outstandings=(tuple(a.max_outstandings)
                                           if a.max_outstandings else None),
-                        rescache=not a.no_rescache)
+                        rescache=not a.no_rescache,
+                        workers=a.workers)
     if a.dse or a.dse_only:
         out["dse"] = run_dse(smoke=a.smoke, kernels=kernels,
                              out_path=a.out,

@@ -1,4 +1,4 @@
-"""Memoized trace resolution: the content-addressed ``ResolvedTrace`` store.
+"""Memoized trace resolution: the chunk-granular, prefix-serving store.
 
 Resolving an address trace against a memory model — cache replay,
 backing-store draws, folding into per-stage ``(c, lat_add)`` arrays — is
@@ -7,15 +7,15 @@ every sweep cell that shares a ``(trace, memory model, seed)`` triple:
 FIFO depths, chunk sizes, and host processes only change the cheap
 wavefront solve.  This module caches that resolution product:
 
-* **in process** — a byte-capped LRU of :class:`ResolvedTrace` artifacts,
-  shared by every simulation in the interpreter (``paper_fig5``,
-  ``sweep``, ``Compiled.sweep`` cells alike);
+* **in process** — a byte-capped LRU of per-chunk records, shared by
+  every simulation in the interpreter (``paper_fig5``, ``sweep``,
+  ``Compiled.sweep`` cells alike);
 * **on disk** — an atomic store under ``experiments/.rescache/`` (or
   ``$REPRO_RESCACHE_DIR``) so spawn-based process pools and repeated
   benchmark runs share work; corrupt or concurrent writes degrade to a
   cache miss, never an error.
 
-The cache key is a blake2b digest of
+The cache key (**v3**) is a blake2b digest of
 
 * the **trace fingerprints** — full content for materialized arrays up
   to :data:`FULL_HASH_MAX` addresses, and a deterministic sample of
@@ -33,36 +33,68 @@ The cache key is a blake2b digest of
   resolved latencies: port/DRAM latencies, backing hit rate, cache
   geometry including ``write_allocate``, and — through the burst
   masks — ``line_bytes``.  Fold-only fields (``words_per_cycle``,
-  ``max_outstanding``, and — for the dataflow engine —
-  ``posted_writes``) are excluded: sweep lanes that only vary the port
-  knobs share one artifact.  The model's *name* is excluded too;
-* the **seed** and **iteration count**.  The chunk size is excluded —
-  resolution is chunk-invariant (asserted by the streaming tests).
+  ``max_outstanding``, ``store_buffer_depth``, and ``posted_writes``)
+  are excluded: sweep lanes that only vary the port knobs share one
+  artifact.  Since v3 the conventional engine's ``posted_writes`` and
+  static-overlap credit are fold-only too (its artifact stores raw
+  per-access latencies, not pre-folded stall sums).  The model's *name*
+  is excluded;
+* the **seed**.  Unlike v2, the **iteration count is NOT part of the
+  key**: resolution is forward-causal (the latency of access *i*
+  depends only on accesses before it), so an artifact resolved for N
+  iterations is byte-identical on its first M rows to one resolved for
+  M < N.  The chunk size is likewise excluded — resolution is
+  chunk-invariant (asserted by the streaming tests).
 
-The stored artifact is correspondingly **per-op**: the ``(n_iters, K)``
-matrix of resolved per-access latencies (zero where an op issued no
-request that iteration — invalid or burst-continuation slots).  Serving
-re-derives windows/burst masks from the traces (cheap, stateless) and
-folds the matrix into each consumer's per-stage ``(c, lat_add)`` arrays
-(:class:`repro.core.simulator._OpFolder`), so one artifact serves every
-stage grouping, chunk size, and fold-only model variant.  v1 per-stage
-artifacts are unreadable under the v2 keys and age out of the store.
+The stored artifact is a **sequence of chunk records** at the canonical
+granularity :data:`CHUNK_ITERS`, one ``<key>.c<idx>.npz`` file each:
+
+* ``ops`` — the chunk's per-op resolved latency matrix
+  (``(n, K)`` int32; zero where an op issued no request — invalid or
+  burst-continuation slots).  The processor artifact stores a per-op
+  *hit-level* matrix instead (int8: 0 none, 1 L1, 2 L2, 3 DRAM).
+* ``hitbits`` — the packed on-PL-cache hit flags (models with a cache),
+  so cache statistics for *any* prefix are exact without re-deriving
+  them from latencies.
+* the **resume state** at the chunk's end — the cache's per-set recency
+  stacks and the cumulative RNG draw count — so an interrupted run
+  resumes from its last completed chunk, bit-identically.
+* cumulative hit/miss counters at the chunk boundary.
+
+This layout is what makes v3 **prefix-serving**: a run of M iterations
+reads chunk records ``0 .. ceil(M/CHUNK_ITERS)-1`` and trims the last,
+regardless of the N the artifact was originally resolved for; a run of
+N' > N serves the stored prefix and resolves only the missing chunks,
+seeded from the last record's resume state.
+
+**v2→v3 invalidation:** v2 stored one whole-run ``<key>.npz`` per
+``(…, n_iters)`` key plus ``<key>.json`` stall/hit summaries for the
+conventional/processor engines.  v3 keys do not collide with v2 keys
+(the version string is part of the digest) and v2 payloads do not parse
+as v3 chunk records (a failed load degrades to a cache miss), so v2
+files are simply dead weight: run :func:`gc` — or let the byte-cap
+evictor age them out — to reclaim the space.  The first post-upgrade
+run of each configuration resolves cold and stores v3 chunks.
 
 Results served from the cache are bit-identical to a fresh resolution;
 disable with ``REPRO_RESCACHE=0``, ``configure(enabled=False)``, or the
-benchmarks' ``--no-rescache`` flag.  Artifacts whose raw size exceeds
-:func:`configure`'s ``artifact_mb`` (Floyd–Warshall's 10⁹-iteration
-grid) are never stored — those runs still share resolution *within* a
-process through :func:`~repro.core.simulator.simulate_dataflow_many`'s
-lanes.
+benchmarks' ``--no-rescache`` flag.  An artifact whose full size would
+exceed :func:`configure`'s ``artifact_mb`` (Floyd–Warshall's
+10⁹-iteration grid) stores only its first ``artifact_mb``-worth of
+chunks: short reruns still prefix-serve and long reruns resume from the
+stored prefix's end, while the tail beyond it shares resolution
+*within* a run through
+:func:`~repro.core.simulator.simulate_dataflow_many`'s lanes and
+across cores through the chunk-graph executor.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import glob as _glob
 import hashlib
-import json
 import os
+import re
 import tempfile
 from collections import OrderedDict
 from typing import Any, Sequence
@@ -80,7 +112,17 @@ FULL_HASH_MAX = 1 << 22
 SAMPLE_WINDOWS = 16
 SAMPLE_LEN = 4096
 
-_KEY_VERSION = "rescache-v2"
+#: Canonical chunk granularity of stored artifacts (iterations).  Every
+#: producer emits records on these boundaries no matter how the run
+#: itself was chunked, so artifacts written at any ``chunk_iters`` (and
+#: by any worker of the sharded executor) tile identically.
+CHUNK_ITERS = 1 << 20
+
+_KEY_VERSION = "rescache-v3"
+
+#: v3 chunk-record file names; anything else in the store directory is
+#: an orphan from an earlier key version (see :func:`gc`).
+_CHUNK_RE = re.compile(r"^[0-9a-f]{32}\.c\d{5,}\.npz$")
 
 
 @dataclasses.dataclass
@@ -89,20 +131,31 @@ class _Config:
     directory: str | None = os.environ.get("REPRO_RESCACHE_DIR")
     memory_mb: int = int(os.environ.get("REPRO_RESCACHE_MEM_MB", "256"))
     artifact_mb: int = int(os.environ.get("REPRO_RESCACHE_ART_MB", "256"))
-    disk_mb: int = int(os.environ.get("REPRO_RESCACHE_DISK_MB", "2048"))
+    # sized so one full Fig. 5 regeneration (all kernels × engines ×
+    # memory models, Floyd–Warshall capped to its stored prefix) fits
+    # without the evictor cannibalizing earlier kernels' records
+    disk_mb: int = int(os.environ.get("REPRO_RESCACHE_DISK_MB", "4096"))
+    #: hard byte cap on the on-disk store; overrides ``disk_mb`` when set
+    max_bytes: int | None = (
+        int(os.environ["REPRO_RESCACHE_MAX_BYTES"])
+        if os.environ.get("REPRO_RESCACHE_MAX_BYTES") else None)
 
 
 _cfg = _Config()
-_mem: "OrderedDict[str, ResolvedTrace]" = OrderedDict()
+_mem: "OrderedDict[tuple[str, int], ChunkRecord]" = OrderedDict()
 _mem_bytes = 0
-_summaries: "OrderedDict[str, dict]" = OrderedDict()
+_evict_accum = 0  # bytes stored since the last disk-evictor sweep
 _stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "stores": 0,
-          "too_large": 0, "disk_errors": 0}
+          "too_large": 0, "disk_errors": 0,
+          #: chunks resolved live (cold) vs served from the store —
+          #: the store census the benchmarks and acceptance tests read
+          "cold_chunks": 0, "served_chunks": 0}
 
 
 def configure(*, enabled: bool | None = None, directory: str | None = None,
               memory_mb: int | None = None, artifact_mb: int | None = None,
-              disk_mb: int | None = None) -> None:
+              disk_mb: int | None = None,
+              max_bytes: int | None = None) -> None:
     """Adjust the cache at runtime (tests, benchmark flags)."""
     if enabled is not None:
         _cfg.enabled = enabled
@@ -114,6 +167,8 @@ def configure(*, enabled: bool | None = None, directory: str | None = None,
         _cfg.artifact_mb = artifact_mb
     if disk_mb is not None:
         _cfg.disk_mb = disk_mb
+    if max_bytes is not None:
+        _cfg.max_bytes = max_bytes
 
 
 def enabled(override: bool | None = None) -> bool:
@@ -124,11 +179,22 @@ def stats() -> dict[str, int]:
     return dict(_stats, memory_bytes=_mem_bytes, entries=len(_mem))
 
 
+def note_chunks(*, cold: int = 0, served: int = 0) -> None:
+    """Census hook: producers report live-resolved vs store-served
+    chunks (a prefix-served run must report ``cold == 0``)."""
+    _stats["cold_chunks"] += cold
+    _stats["served_chunks"] += served
+
+
+def _disk_cap_bytes() -> int:
+    return _cfg.max_bytes if _cfg.max_bytes is not None \
+        else _cfg.disk_mb * (1 << 20)
+
+
 def clear(*, disk: bool = False) -> None:
     """Drop the in-process cache (and optionally the disk store)."""
     global _mem_bytes
     _mem.clear()
-    _summaries.clear()
     _mem_bytes = 0
     for k in _stats:
         _stats[k] = 0
@@ -144,19 +210,18 @@ def clear(*, disk: bool = False) -> None:
 
 
 def evict(key: str) -> None:
-    """Drop one artifact (or summary) from the in-process LRU and the
+    """Drop every chunk of one artifact from the in-process LRU and the
     disk store.  Benchmark meters use this to keep cold-timing probes
     cold across runs; missing keys are a no-op."""
     global _mem_bytes
-    art = _mem.pop(key, None)
-    if art is not None:
-        _mem_bytes -= art.nbytes
-    _summaries.pop(key, None)
+    for k in [k for k in _mem if k[0] == key]:
+        _mem_bytes -= _mem[k].nbytes
+        del _mem[k]
     d = _dir()
     if d:
-        for suffix in (".npz", ".json"):
+        for path in _glob.glob(os.path.join(d, key + ".c*.npz")):
             try:
-                os.unlink(os.path.join(d, key + suffix))
+                os.unlink(path)
             except OSError:
                 pass
 
@@ -234,194 +299,331 @@ def _cache_signature(mem: MemoryModel) -> tuple | None:
 
 
 def resolution_key(kind: str, stages: Sequence[SimStage],
-                   mem: MemoryModel, seed: int, n_iters: int,
+                   mem: MemoryModel, seed: int,
                    extra: Any = None) -> str:
     """Content-addressed key for one resolution product.
 
-    The signature is **per-op**, not per-stage (see the module
-    docstring): stage grouping, latency, and II are absent, as are the
-    fold-only memory-model fields.  ``kind`` selects which per-op and
-    model fields matter:
+    The signature is **per-op**, not per-stage, and — new in v3 —
+    **length-free**: neither the iteration count nor any fold-only
+    model field participates (see the module docstring).  ``kind``
+    selects which per-op and model fields matter:
 
     * ``"dataflow"`` — ops carry their serialized flag (a
       ``mem_in_scc`` stage's accesses never burst and serialize into
-      the II); the model contributes ``line_bytes`` (burst masks) but
-      not ``posted_writes`` (fold-only).
+      the II); the model contributes ``line_bytes`` (burst masks).
     * ``"conventional"`` — no bursts and no serialization (every valid
-      access resolves), so neither flag keys; ``posted_writes`` *does*
-      (posted stores never stall the static engine, changing the stored
-      stall totals).
+      access resolves), so neither flag keys.  ``posted_writes`` no
+      longer keys either: the v3 artifact stores raw per-access
+      latencies, and posted stores are excluded at fold time.
     """
     cache = _cache_signature(mem)
     if kind == "conventional":
         ops = tuple((trace_fingerprint(acc), acc.is_store)
                     for st in stages for acc in st.accesses)
         msig = (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
-                mem.posted_writes, cache)
+                cache)
     else:
         ops = tuple((trace_fingerprint(acc), acc.is_store, st.mem_in_scc)
                     for st in stages for acc in st.accesses)
         msig = (mem.port_latency, mem.dram_latency, mem.backing_hit_rate,
                 mem.line_bytes, cache)
-    payload = (_KEY_VERSION, kind, ops, msig, seed, n_iters, extra)
+    payload = (_KEY_VERSION, kind, ops, msig, seed, extra)
     return hashlib.blake2b(repr(payload).encode(),
                            digest_size=16).hexdigest()
 
 
-def processor_key(accesses: Sequence[MemAccess], model: Any,
-                  n_iters: int) -> str:
+def processor_key(accesses: Sequence[MemAccess], model: Any) -> str:
+    """Processor-hierarchy key: the cache *sizes* key the stored hit
+    levels; hit latencies (``l1_hit``/``l2_hit``/``dram``) are fold-only
+    — the cycle count is rebuilt from the level matrix."""
     payload = (_KEY_VERSION, "processor",
                tuple((trace_fingerprint(a), a.is_store) for a in accesses),
-               (model.l1_kb, model.l2_kb, model.l1_hit, model.l2_hit),
-               n_iters)
+               (model.l1_kb, model.l2_kb))
     return hashlib.blake2b(repr(payload).encode(),
                            digest_size=16).hexdigest()
 
 
 # ---------------------------------------------------------------------------
-# Artifacts
+# Chunk records
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
-class ResolvedTrace:
-    """One memoized resolution product: the **per-op** latency matrix
-    ``ops`` (``(n_iters, K)`` int32; ``ops[i, k]`` is the resolved
-    latency of the kernel's ``k``-th memory op at iteration ``i``, zero
-    when that op issued no request — invalid or burst-continuation
-    slot) plus the cache statistics.  ``chunk(lo, hi)`` serves zero-copy
-    views; consumers fold them into per-stage arrays via
-    :class:`repro.core.simulator._OpFolder`, so any stage grouping and
-    any chunking scheme replays bit-identically."""
+class ChunkRecord:
+    """One stored resolution chunk: iterations
+    ``[idx*CHUNK_ITERS, idx*CHUNK_ITERS + n)`` of one base key.
+
+    ``ops`` is the per-op latency matrix (int32) — or, for the
+    processor artifact, the per-op hit-level matrix (int8).  ``hitbits``
+    packs the on-PL-cache hit flags of the same ``(n, K)`` layout
+    (``None`` for cache-less models); ``hitbits2`` is the processor's
+    L2 plane.  ``states`` maps state names (``"cache"``, ``"l1"``,
+    ``"l2"``) to per-set MRU-first recency-stack snapshots taken at the
+    chunk's END; ``cum`` holds cumulative counters at the same point
+    (``hits``/``misses``/``draws``/``max_tag`` and processor
+    equivalents).  Together they are the resume point: a run needing
+    more iterations seeds its resolver from the last stored record and
+    continues bit-identically."""
 
     key: str
-    n_iters: int
+    idx: int
+    n: int
     ops: np.ndarray
-    cache_hits: int = 0
-    cache_misses: int = 0
+    hitbits: np.ndarray | None = None
+    hitbits2: np.ndarray | None = None
+    states: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    cum: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def nbytes(self) -> int:
-        return self.ops.nbytes
+        b = self.ops.nbytes
+        for a in (self.hitbits, self.hitbits2, *self.states.values()):
+            if a is not None:
+                b += a.nbytes
+        return b
 
-    def chunk(self, lo: int, hi: int) -> np.ndarray:
-        return self.ops[lo:hi]
-
-
-class ArtifactWriter:
-    """Accumulates per-op latency chunks while a live run streams, and
-    commits the assembled :class:`ResolvedTrace` when the run finishes —
-    unless the artifact would exceed the size cap, in which case it
-    silently abandons collection (the run itself is unaffected)."""
-
-    def __init__(self, key: str, n_ops: int, n_iters: int):
-        self.key = key
-        self.n_iters = n_iters
-        est = n_ops * n_iters * 4  # int32 per (op, iteration)
-        self.dead = est > _cfg.artifact_mb * (1 << 20)
-        if self.dead:
-            _stats["too_large"] += 1
-        self.chunks: list[np.ndarray] = []
-
-    def add(self, ops_chunk: np.ndarray) -> None:
-        if not self.dead:
-            self.chunks.append(ops_chunk)
-
-    def finish(self, cache_hits: int, cache_misses: int) -> None:
-        if self.dead or not self.chunks:
-            return
-        art = ResolvedTrace(self.key, self.n_iters,
-                            np.concatenate(self.chunks, axis=0),
-                            cache_hits, cache_misses)
-        put(art)
+    def hit_flags(self, plane: int = 1) -> np.ndarray | None:
+        bits = self.hitbits if plane == 1 else self.hitbits2
+        if bits is None:
+            return None
+        K = self.ops.shape[1]
+        return np.unpackbits(bits, count=self.n * K).reshape(
+            self.n, K).astype(bool)
 
 
-def _touch_lru(key: str) -> None:
-    _mem.move_to_end(key)
+def pack_flags(flags: np.ndarray) -> np.ndarray:
+    """Pack an ``(n, K)`` bool matrix for a :class:`ChunkRecord`."""
+    return np.packbits(flags.reshape(-1))
 
 
-def _insert_mem(art: ResolvedTrace) -> None:
+def shrink_ops(ops: np.ndarray) -> np.ndarray:
+    """Narrow a latency matrix to the smallest integer dtype that holds
+    it (resolved latencies are bounded by the DRAM trip — typically
+    < 128, so records shrink 4×).  Consumers widen back to int32 before
+    folding; values are preserved exactly."""
+    if ops.dtype == np.int8 or ops.size == 0:
+        return ops
+    mx = int(ops.max())
+    if mx < 128:
+        return ops.astype(np.int8)
+    if mx < (1 << 15) and ops.dtype != np.int16:
+        return ops.astype(np.int16)
+    return ops
+
+
+def _chunk_path(d: str, key: str, idx: int) -> str:
+    return os.path.join(d, f"{key}.c{idx:05d}.npz")
+
+
+def _touch_lru(k: tuple[str, int]) -> None:
+    _mem.move_to_end(k)
+
+
+def _insert_mem(rec: ChunkRecord) -> None:
     global _mem_bytes
     cap = _cfg.memory_mb * (1 << 20)
-    if art.nbytes > cap:
+    if rec.nbytes > cap:
         return
-    if art.key in _mem:
-        _mem_bytes -= _mem[art.key].nbytes
-        del _mem[art.key]
-    _mem[art.key] = art
-    _mem_bytes += art.nbytes
+    k = (rec.key, rec.idx)
+    if k in _mem:
+        _mem_bytes -= _mem[k].nbytes
+        del _mem[k]
+    _mem[k] = rec
+    _mem_bytes += rec.nbytes
     while _mem_bytes > cap and _mem:
         _, old = _mem.popitem(last=False)
         _mem_bytes -= old.nbytes
 
 
-def get(key: str) -> ResolvedTrace | None:
-    """Look an artifact up in the in-process LRU, then the disk store."""
-    art = _mem.get(key)
-    if art is not None:
-        _stats["mem_hits"] += 1
-        _touch_lru(key)
-        return art
+def get_chunk(key: str, idx: int,
+              refresh: bool = False) -> ChunkRecord | None:
+    """Look one chunk record up in the in-process LRU, then disk.
+
+    ``refresh=True`` skips the LRU and reloads from disk (still
+    re-inserting the fresh copy): a partial tail record can be
+    *overwritten* with a longer one by a resuming run or a pool worker,
+    and a consumer that knows a rewrite just happened must not trust
+    its cached copy."""
+    k = (key, idx)
+    if not refresh:
+        rec = _mem.get(k)
+        if rec is not None:
+            _stats["mem_hits"] += 1
+            _touch_lru(k)
+            return rec
     d = _dir()
-    path = os.path.join(d, key + ".npz") if d else None
+    path = _chunk_path(d, key, idx) if d else None
     if path and os.path.exists(path):
         try:
             with np.load(path) as z:
-                meta = z["meta"]
-                art = ResolvedTrace(key, int(meta[2]), z["ops"],
-                                    int(meta[0]), int(meta[1]))
+                cum_keys = [str(s) for s in z["cum_keys"]]
+                cum_vals = z["cum_vals"]
+                states = {name[3:]: z[name] for name in z.files
+                          if name.startswith("st_")}
+                rec = ChunkRecord(
+                    key, idx, int(z["n"]), z["ops"],
+                    z["hitbits"] if "hitbits" in z.files else None,
+                    z["hitbits2"] if "hitbits2" in z.files else None,
+                    states,
+                    {kk: int(v) for kk, v in zip(cum_keys, cum_vals)})
             os.utime(path)  # LRU recency for the disk evictor
             _stats["disk_hits"] += 1
-            _insert_mem(art)
-            return art
+            _insert_mem(rec)
+            return rec
         except (OSError, KeyError, ValueError, _BadZipFile):
             _stats["disk_errors"] += 1
     _stats["misses"] += 1
     return None
 
 
-def put(art: ResolvedTrace) -> None:
-    """Commit an artifact to the in-process LRU and the disk store."""
-    if art.nbytes > _cfg.artifact_mb * (1 << 20):
-        _stats["too_large"] += 1
-        return
+def chunk_len(key: str, idx: int) -> int | None:
+    """Length (iterations) of one stored chunk without loading its
+    payload — ``None`` when the chunk is absent."""
+    rec = _mem.get((key, idx))
+    if rec is not None:
+        return rec.n
+    d = _dir()
+    path = _chunk_path(d, key, idx) if d else None
+    if path and os.path.exists(path):
+        try:
+            with np.load(path) as z:
+                return int(z["n"])
+        except (OSError, KeyError, ValueError, _BadZipFile):
+            _stats["disk_errors"] += 1
+    return None
+
+
+def put_chunk(rec: ChunkRecord) -> None:
+    """Commit one chunk record to the in-process LRU and the disk
+    store (atomic file replace; concurrent writers race benignly)."""
     _stats["stores"] += 1
-    _insert_mem(art)
+    _insert_mem(rec)
     d = _dir()
     if not d:
         return
     try:
         os.makedirs(d, exist_ok=True)
-        payload = {"meta": np.array(
-            [art.cache_hits, art.cache_misses, art.n_iters,
-             art.ops.shape[1]],
-            dtype=np.int64), "ops": art.ops}
+        payload: dict[str, np.ndarray] = {
+            "n": np.int64(rec.n), "ops": rec.ops,
+            "cum_keys": np.array(sorted(rec.cum)),
+            "cum_vals": np.array([rec.cum[k] for k in sorted(rec.cum)],
+                                 dtype=np.int64)}
+        if rec.hitbits is not None:
+            payload["hitbits"] = rec.hitbits
+        if rec.hitbits2 is not None:
+            payload["hitbits2"] = rec.hitbits2
+        for name, arr in rec.states.items():
+            payload["st_" + name] = arr
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 np.savez(f, **payload)
-            os.replace(tmp, os.path.join(d, art.key + ".npz"))
+            os.replace(tmp, _chunk_path(d, rec.key, rec.idx))
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
-        _evict_disk(d)
+        # amortized eviction: a full directory scan per stored chunk
+        # would be O(chunks × files); sweep once per 1/16th of the cap
+        global _evict_accum
+        _evict_accum += rec.nbytes
+        if _evict_accum >= _disk_cap_bytes() // 16:
+            _evict_accum = 0
+            _evict_disk(d)
     except OSError:
         _stats["disk_errors"] += 1
 
 
+def prefix(key: str | None,
+           chunk_iters: int | None = None) -> tuple[int, int]:
+    """The stored contiguous prefix of one artifact:
+    ``(full_chunks, avail_iters)``.
+
+    ``full_chunks`` counts leading records of exactly ``chunk_iters``
+    iterations — the resume point is ``full_chunks * chunk_iters``
+    (a trailing partial record extends ``avail_iters`` for prefix
+    *serving* but cannot seed a resume, because its resume state sits
+    mid-chunk off the canonical grid; a longer run re-resolves it)."""
+    if key is None:
+        return 0, 0
+    if chunk_iters is None:
+        chunk_iters = CHUNK_ITERS
+    full = 0
+    avail = 0
+    idx = 0
+    while True:
+        n = chunk_len(key, idx)
+        if n is None:
+            break
+        avail += n
+        if n < chunk_iters:
+            break
+        full += 1
+        idx += 1
+    return full, avail
+
+
+class ChunkWriter:
+    """Commits canonical-grid chunk records as a live run streams.
+
+    Unlike the v2 whole-run writer, records hit the store the moment
+    their chunk completes — an interrupted run keeps every completed
+    chunk, and a later run resumes from the last one.  An artifact
+    whose full size would blow the ``artifact_mb`` cap (Floyd–
+    Warshall's 10⁹-iteration grid) stores only its first
+    ``artifact_mb``-worth of chunks: reduced-iteration reruns still
+    prefix-serve (zero cold resolution for any run inside the stored
+    prefix) and full reruns resume from its end, while the store stays
+    bounded."""
+
+    def __init__(self, key: str | None, n_ops: int, n_iters: int,
+                 itemsize: int = 4):
+        self.key = key
+        cap = _cfg.artifact_mb * (1 << 20)
+        per_chunk = max(1, n_ops * CHUNK_ITERS * itemsize)
+        self.max_chunks = cap // per_chunk
+        self.dead = key is None or self.max_chunks == 0
+        if key is not None and n_ops * n_iters * itemsize > cap:
+            _stats["too_large"] += 1  # truncated to a stored prefix
+
+    def add(self, idx: int, n: int, ops: np.ndarray,
+            hitbits: np.ndarray | None = None,
+            hitbits2: np.ndarray | None = None,
+            states: dict[str, np.ndarray] | None = None,
+            cum: dict[str, int] | None = None) -> None:
+        if self.dead or idx >= self.max_chunks:
+            return
+        put_chunk(ChunkRecord(self.key, idx, n, shrink_ops(ops),
+                              hitbits, hitbits2,
+                              dict(states or {}), dict(cum or {})))
+
+
+def _scan_store(d: str, suffix: str = ".npz") -> dict[str, tuple]:
+    """``path -> (size, mtime)`` for the store's files; entries that
+    vanish mid-scan (concurrent evictors) are simply skipped."""
+    out: dict[str, tuple] = {}
+    for f in os.listdir(d):
+        if not f.endswith(suffix):
+            continue
+        path = os.path.join(d, f)
+        try:
+            st = os.stat(path)
+        except OSError:
+            continue
+        out[path] = (st.st_size, st.st_mtime)
+    return out
+
+
 def _evict_disk(d: str) -> None:
-    """Keep the store under the disk cap, oldest access first."""
-    cap = _cfg.disk_mb * (1 << 20)
+    """Keep the store under the byte cap, oldest access first."""
+    cap = _disk_cap_bytes()
     try:
-        files = [(os.path.join(d, f)) for f in os.listdir(d)
-                 if f.endswith(".npz")]
-        sizes = {f: os.path.getsize(f) for f in files}
-        total = sum(sizes.values())
+        stat = _scan_store(d)
+        total = sum(sz for sz, _ in stat.values())
         if total <= cap:
             return
-        for f in sorted(files, key=os.path.getmtime):
+        for f in sorted(stat, key=lambda p: stat[p][1]):
             try:
                 os.unlink(f)
-                total -= sizes[f]
+                total -= stat[f][0]
             except OSError:
                 pass
             if total <= cap:
@@ -430,47 +632,77 @@ def _evict_disk(d: str) -> None:
         pass
 
 
-# ---------------------------------------------------------------------------
-# Tiny summary artifacts (conventional stalls, processor hit counts)
-# ---------------------------------------------------------------------------
+def gc(max_bytes: int | None = None) -> dict[str, int]:
+    """Garbage-collect the on-disk store.
 
-def get_summary(key: str) -> dict | None:
-    s = _summaries.get(key)
-    if s is not None:
-        _stats["mem_hits"] += 1
-        return s
+    Removes **orphans** — files that are not v3 chunk records (v1
+    whole-run and v2 per-op ``<key>.npz`` artifacts, v2 ``.json``
+    summaries, stray ``.tmp`` files) — then enforces the byte cap
+    (``max_bytes`` argument, else ``$REPRO_RESCACHE_MAX_BYTES``, else
+    ``disk_mb``) by evicting the least-recently-used chunk files.
+    Returns a small report; safe to call concurrently with readers
+    (missing files degrade to cache misses)."""
     d = _dir()
-    path = os.path.join(d, key + ".json") if d else None
-    if path and os.path.exists(path):
+    report = {"orphans_removed": 0, "orphan_bytes": 0,
+              "evicted": 0, "evicted_bytes": 0, "remaining_bytes": 0}
+    if not d or not os.path.isdir(d):
+        return report
+    cap = max_bytes if max_bytes is not None else _disk_cap_bytes()
+    keep: list[str] = []
+    for f in os.listdir(d):
+        path = os.path.join(d, f)
+        if not os.path.isfile(path):
+            continue
+        if _CHUNK_RE.match(f):
+            keep.append(path)
+            continue
+        if f.endswith((".npz", ".json", ".tmp")):
+            try:
+                sz = os.path.getsize(path)
+                os.unlink(path)
+                report["orphans_removed"] += 1
+                report["orphan_bytes"] += sz
+            except OSError:
+                pass
+    stat = {}
+    for path in keep:
         try:
-            with open(path) as f:
-                s = json.load(f)
-            _stats["disk_hits"] += 1
-            _summaries[key] = s
-            return s
-        except (OSError, ValueError):
-            _stats["disk_errors"] += 1
-    _stats["misses"] += 1
-    return None
+            st = os.stat(path)
+        except OSError:
+            continue  # raced away: already gone
+        stat[path] = (st.st_size, st.st_mtime)
+    total = sum(sz for sz, _ in stat.values())
+    for path in sorted(stat, key=lambda p: stat[p][1]):
+        if total <= cap:
+            break
+        try:
+            os.unlink(path)
+            total -= stat[path][0]
+            report["evicted"] += 1
+            report["evicted_bytes"] += stat[path][0]
+        except OSError:
+            pass
+    report["remaining_bytes"] = total
+    return report
 
 
-def put_summary(key: str, summary: dict) -> None:
-    _stats["stores"] += 1
-    _summaries[key] = summary
-    while len(_summaries) > 4096:
-        _summaries.popitem(last=False)
+def census() -> dict[str, Any]:
+    """Store census: artifact count, chunk count, bytes on disk, plus
+    the live cold/served chunk counters — what the acceptance checks
+    ("a prefix-served rerun performs zero cold resolutions") read."""
     d = _dir()
-    if not d:
-        return
-    try:
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(summary, f)
-            os.replace(tmp, os.path.join(d, key + ".json"))
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-    except OSError:
-        _stats["disk_errors"] += 1
+    keys: set[str] = set()
+    chunks = 0
+    total = 0
+    if d and os.path.isdir(d):
+        for f in os.listdir(d):
+            if _CHUNK_RE.match(f):
+                keys.add(f.split(".")[0])
+                chunks += 1
+                try:
+                    total += os.path.getsize(os.path.join(d, f))
+                except OSError:
+                    pass
+    return {"dir": d, "artifacts": len(keys), "chunks": chunks,
+            "bytes": total, "cold_chunks": _stats["cold_chunks"],
+            "served_chunks": _stats["served_chunks"]}

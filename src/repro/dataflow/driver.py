@@ -115,7 +115,10 @@ class Compiled:
         """Design-space sweep: grid the cycle simulator over memory models
         × FIFO depths × ``mem_in_scc`` modes, fully simulated (see
         :func:`repro.dataflow.schedule.sweep_schedule`; dispatched through
-        the ``simulate`` backend)."""
+        the ``simulate`` backend).  Depth lanes solve deepest-first with
+        the depth-incremental warm start, and ``workers=N`` shards the
+        trace resolution over the chunk-graph process pool
+        (bit-identical; multi-core)."""
         return get_backend("simulate").sweep(self, **kwargs)
 
     def explore(self, **kwargs: Any) -> Any:
@@ -124,9 +127,12 @@ class Compiled:
         kernel, prune against a
         :class:`~repro.dataflow.options.ResourceConstraints` resource
         model, simulate every survivor (sharing resolved traces through
-        the per-op rescache), and return a
+        the chunk-granular per-op rescache), and return a
         :class:`~repro.dataflow.dse.DseResult` whose cycles-vs-FIFO-bits
-        Pareto front carries full ``Compiled`` artifacts."""
+        Pareto front carries full ``Compiled`` artifacts.  Pass
+        ``fifo_depths=[...]`` for the joint partition×FIFO-depth front
+        (depth becomes a search axis: every candidate is costed and
+        simulated at every depth, one warm-started solve each)."""
         from . import dse as _dse
         return _dse.explore(self, **kwargs)
 

@@ -221,109 +221,140 @@ def evaluate_candidates(
     mem: MemoryModel,
     n_iters: int,
     *,
-    fifo_depth: int = 8,
+    fifo_depth: int | None = None,
+    fifo_depths: Sequence[int] | None = None,
+    depth_lists: Sequence[Sequence[int]] | None = None,
     seed: int = 0,
     use_rescache: bool | None = None,
     chunk_iters: int | None = None,
-) -> tuple[list[int], dict]:
-    """Simulate many candidate stage decompositions of *one* kernel in a
-    single chunk-major streaming pass.
+    depth_incremental: bool = True,
+) -> tuple[list[dict[int, int]], dict]:
+    """Simulate many candidate stage decompositions of *one* kernel —
+    each over a grid of FIFO depths — in a single chunk-major streaming
+    pass.
 
     Candidates are grouped by their per-op resolution key: each distinct
-    group resolves its traces once (served from the rescache when
-    possible, written back when not), and every candidate then only pays
-    the cheap per-stage fold plus its own wavefront solve.  Iterating
-    chunk-major keeps the per-trace window/burst memos hot, so sibling
-    candidates regenerate nothing.  Cycle counts are bit-identical to
-    stand-alone :func:`repro.core.simulator.simulate_dataflow` runs
-    (same canonical access order, same draw streams — asserted in
-    tests).  Returns ``(cycles per candidate, stats)``.
+    group resolves its traces once (served from the chunk-granular
+    rescache when possible — any stored prefix counts — and written
+    back when not), and every candidate then only pays the cheap
+    per-stage fold plus one wavefront solve per depth.  Depths are
+    solved deepest-first with the depth-incremental warm start, so
+    gridding depth costs little more than one solve per candidate.
+    Iterating chunk-major keeps the per-trace window/burst memos hot,
+    so sibling candidates regenerate nothing.  Cycle counts are
+    bit-identical to stand-alone
+    :func:`repro.core.simulator.simulate_dataflow` runs (same canonical
+    access order, same draw streams — asserted in tests).
+
+    Depths per candidate come from ``depth_lists`` (one sequence per
+    candidate), else the shared ``fifo_depths``, else the single
+    ``fifo_depth`` (default 8).  Returns ``(per-candidate {depth:
+    cycles} dicts, stats)``.
     """
     from ..core import rescache as _rc
     from ..core.simulator import (DEFAULT_CHUNK_ITERS, _LaneSolver,
-                                  _OpFolder, _ResolvedChunk,
-                                  _SharedResolver, _fold_stage)
+                                  _OpFolder, _ResolutionPlan,
+                                  _ResolvedChunk, _ServeLost,
+                                  _chunk_bounds, _fold_stage)
     chunk_iters = chunk_iters or DEFAULT_CHUNK_ITERS
+    if depth_lists is None:
+        shared = tuple(fifo_depths) if fifo_depths is not None \
+            else (fifo_depth if fifo_depth is not None else 8,)
+        depth_lists = [shared] * len(stage_lists)
     if n_iters <= 0 or not stage_lists:
-        return [0] * len(stage_lists), {"resolution_groups": 0,
-                                        "cold_groups": 0}
-    use_cache = _rc.enabled(use_rescache)
-    groups: dict[str, dict] = {}
-    gkeys: list[str] = []
-    for stages in stage_lists:
-        gkey = _rc.resolution_key("dataflow", stages, mem, seed, n_iters)
-        gkeys.append(gkey)
-        if gkey not in groups:
-            g: dict = {"stages": stages, "art": None, "resolver": None,
-                       "writer": None}
-            if use_cache:
-                g["art"] = _rc.get(gkey)
-            if g["art"] is None:
-                g["resolver"] = _SharedResolver(stages, {mem.name: mem},
-                                                seed)
-                if use_cache:
-                    g["writer"] = _rc.ArtifactWriter(
-                        gkey, g["resolver"].K, n_iters)
-            groups[gkey] = g
-    folders = [_OpFolder(st) for st in stage_lists]
-    solvers = [_LaneSolver(st, fifo_depth, collect_stalls=False)
-               for st in stage_lists]
-    for lo in range(0, n_iters, chunk_iters):
-        hi = min(lo + chunk_iters, n_iters)
-        n = hi - lo
-        zero = np.zeros(n, dtype=np.int32)
-        for g in groups.values():
-            if g["art"] is not None:
-                g["L"] = g["art"].chunk(lo, hi)
-            else:
-                g["spec_chunk"] = g["resolver"].resolve(lo, hi)[mem.name]
-                g["L"] = g["resolver"].last_ops[mem.name]
-                if g["writer"] is not None:
-                    g["writer"].add(g["L"])
-            # contiguous column views, shared by every candidate of the
-            # group this chunk
-            def _mk_col(L: np.ndarray, cc: dict) -> Any:
-                def col(k: int) -> np.ndarray:
-                    a = cc.get(k)
-                    if a is None:
-                        a = cc[k] = np.ascontiguousarray(L[:, k])
-                    return a
-                return col
-            g["col"] = _mk_col(g["L"], {})
-        # candidates mostly differ in one or two stages: fold each
-        # distinct (group, op set, ii, serialized) stage once per chunk
-        fold_cache: dict[tuple, tuple] = {}
-        for i, (folder, solver) in enumerate(zip(folders, solvers)):
-            g = groups[gkeys[i]]
-            if g["resolver"] is not None and g["stages"] is stage_lists[i]:
-                res = g["spec_chunk"]  # group spec: already folded
-            else:
-                bw = None
-                c_list, lat_list = [], []
-                for s, st in enumerate(stage_lists[i]):
-                    key = (gkeys[i], tuple(folder.stage_cols[s]), st.ii,
-                           st.mem_in_scc)
-                    hit = fold_cache.get(key)
-                    if hit is None:
-                        if bw is None:
-                            bw = folder.burst_words(lo, hi,
-                                                    mem.line_bytes)
-                        hit = _fold_stage(
-                            mem, st.ii, st.mem_in_scc,
-                            folder.stage_cols[s], g["col"], bw[s],
-                            folder.is_store, n, zero)
-                        fold_cache[key] = hit
-                    c_list.append(hit[0])
-                    lat_list.append(hit[1])
-                res = _ResolvedChunk(lo, hi, c_list, lat_list)
-            solver.solve_chunk(res)
-    for g in groups.values():
-        if g["writer"] is not None:
-            g["writer"].finish(*g["resolver"].cache_stats(mem.name))
-    stats = {"resolution_groups": len(groups),
-             "cold_groups": sum(1 for g in groups.values()
-                                if g["resolver"] is not None)}
-    return [int(s.last_finish) for s in solvers], stats
+        return [{d: 0 for d in ds} for ds in depth_lists], \
+            {"resolution_groups": 0, "cold_groups": 0}
+
+    def _run(rescache_override: bool | None) -> tuple[list[dict[int,
+                                                                int]],
+                                                      dict]:
+        groups: dict[str, dict] = {}
+        gkeys: list[str] = []
+        for stages in stage_lists:
+            gkey = _rc.resolution_key("dataflow", stages, mem, seed)
+            gkeys.append(gkey)
+            if gkey not in groups:
+                groups[gkey] = {
+                    "stages": stages,
+                    "plan": _ResolutionPlan(
+                        "dataflow", stages, {mem.name: mem}, seed,
+                        n_iters, rescache_override)}
+        folders = [_OpFolder(st) for st in stage_lists]
+        solvers = [{d: _LaneSolver(st, d, collect_stalls=False)
+                    for d in ds}
+                   for st, ds in zip(stage_lists, depth_lists)]
+        align = _rc.CHUNK_ITERS if _rc.enabled(rescache_override) \
+            else None
+        for lo, hi in _chunk_bounds(n_iters, chunk_iters, align):
+            n = hi - lo
+            zero = np.zeros(n, dtype=np.int32)
+            for g in groups.values():
+                plan = g["plan"]
+                chunks = plan.advance(lo, hi)
+                if mem.name in plan.served:
+                    g["L"] = plan.served[mem.name].chunk(lo, hi)
+                    g["spec_chunk"] = None
+                    _rc.note_chunks(served=1)
+                elif plan.live_chunk_is_served(lo):
+                    g["L"] = plan.live_ops(mem.name, lo, hi)
+                    g["spec_chunk"] = None
+                else:
+                    g["spec_chunk"] = chunks[mem.name]
+                    g["L"] = plan.resolver.last_ops[mem.name]
+
+                # contiguous column views, shared by every candidate of
+                # the group this chunk
+                def _mk_col(L: np.ndarray, cc: dict) -> Any:
+                    def col(k: int) -> np.ndarray:
+                        a = cc.get(k)
+                        if a is None:
+                            a = cc[k] = np.ascontiguousarray(L[:, k])
+                        return a
+                    return col
+                g["col"] = _mk_col(g["L"], {})
+            # candidates mostly differ in one or two stages: fold each
+            # distinct (group, op set, ii, serialized) stage once per
+            # chunk
+            fold_cache: dict[tuple, tuple] = {}
+            for i, folder in enumerate(folders):
+                g = groups[gkeys[i]]
+                if g["spec_chunk"] is not None \
+                        and g["stages"] is stage_lists[i]:
+                    res = g["spec_chunk"]  # group spec: already folded
+                else:
+                    bw = None
+                    c_list, lat_list = [], []
+                    for s, st in enumerate(stage_lists[i]):
+                        key = (gkeys[i], tuple(folder.stage_cols[s]),
+                               st.ii, st.mem_in_scc)
+                        hit = fold_cache.get(key)
+                        if hit is None:
+                            if bw is None:
+                                bw = folder.burst_words(lo, hi,
+                                                        mem.line_bytes)
+                            hit = _fold_stage(
+                                mem, st.ii, st.mem_in_scc,
+                                folder.stage_cols[s], g["col"], bw[s],
+                                folder.is_store, n, zero)
+                            fold_cache[key] = hit
+                        c_list.append(hit[0])
+                        lat_list.append(hit[1])
+                    res = _ResolvedChunk(lo, hi, c_list, lat_list)
+                warm = None
+                for d in sorted(solvers[i], reverse=True):
+                    warm = solvers[i][d].solve_chunk(
+                        res, warm=warm if depth_incremental else None)
+        stats = {"resolution_groups": len(groups),
+                 "cold_groups": sum(
+                     1 for g in groups.values()
+                     if g["plan"].resolver is not None)}
+        return [{d: int(sv.last_finish) for d, sv in by_depth.items()}
+                for by_depth in solvers], stats
+
+    try:
+        return _run(use_rescache)
+    except _ServeLost:  # raced store eviction: redo the pass cold
+        return _run(False)
 
 
 # ---------------------------------------------------------------------------
@@ -333,12 +364,13 @@ def evaluate_candidates(
 
 @dataclasses.dataclass
 class DseCandidate:
-    """One explored (plan, duplicate-toggle) point."""
+    """One explored (plan, duplicate-toggle, FIFO-depth) point."""
 
     groups: tuple[tuple[int, ...], ...]   # plan signature (node-id groups)
     moves: tuple[str, ...]
     duplicate: bool
     resources: dict
+    fifo_depth: int = 8
     cycles: int | None = None             # None => pruned, not simulated
     pruned: str | None = None
     pareto: bool = False
@@ -353,6 +385,7 @@ class DseCandidate:
         return {
             "moves": list(self.moves),
             "duplicate": self.duplicate,
+            "fifo_depth": self.fifo_depth,
             "cycles": self.cycles,
             "pruned": self.pruned,
             "pareto": self.pareto,
@@ -375,6 +408,9 @@ class DseResult:
     n_iters: int
     fifo_depth: int
     mem_name: str
+    #: the explored FIFO-depth axis (a single entry unless the joint
+    #: partition×depth front was requested via ``fifo_depths=...``)
+    fifo_depths: tuple = ()
     wall_s: float = 0.0
     rescache_hits: int = 0
     rescache_misses: int = 0
@@ -407,6 +443,7 @@ class DseResult:
         return {
             "n_iters": self.n_iters,
             "fifo_depth": self.fifo_depth,
+            "fifo_depths": list(self.fifo_depths or (self.fifo_depth,)),
             "mem": self.mem_name,
             "wall_s": self.wall_s,
             "rescache_hits": self.rescache_hits,
@@ -431,13 +468,16 @@ class DseResult:
             f"{self.baseline.fifo_bits} FIFO bits, "
             f"{self.baseline.resources['num_stages']} stages",
         ]
+        multi_depth = len(set(self.fifo_depths
+                              or (self.fifo_depth,))) > 1
         for c in self.front:
             tag = " <- baseline" if c is self.baseline else ""
+            depth = f", depth={c.fifo_depth}" if multi_depth else ""
             lines.append(
                 f"  front: {c.cycles} cycles @ {c.fifo_bits} bits "
                 f"({c.resources['num_stages']} stages, dup="
-                f"{c.duplicate}, moves={'/'.join(c.moves) or 'none'})"
-                f"{tag}")
+                f"{c.duplicate}{depth}, moves="
+                f"{'/'.join(c.moves) or 'none'}){tag}")
         b = self.best()
         lines.append(
             f"  best: {b.cycles} cycles @ {b.fifo_bits} bits "
@@ -462,17 +502,30 @@ def explore_plans(
     duplicate_base: bool = True,
     n_iters: int | None = None,
     fifo_depth: int | None = None,
+    fifo_depths: Sequence[int] | None = None,
     seed: int | None = None,
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
 ) -> DseResult:
-    """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate)``
-    candidates (no ``Compiled`` construction — see
-    :func:`explore` / ``Compiled.explore`` for that layer)."""
+    """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate,
+    FIFO depth)`` candidates (no ``Compiled`` construction — see
+    :func:`explore` / ``Compiled.explore`` for that layer).
+
+    ``fifo_depths`` turns on the *joint* partition×depth search: every
+    (plan, duplicate) pair is costed and simulated at every depth (one
+    resolution, one warm-started solve per depth), and the Pareto front
+    spans both axes.  The enumeration budget ``max_candidates`` counts
+    (plan, duplicate) pairs, not depth points."""
     from ..core import rescache as _rc
     rc = constraints or ResourceConstraints()
     n_iters = rc.n_iters if n_iters is None else n_iters
-    fifo_depth = rc.fifo_depth if fifo_depth is None else fifo_depth
+    if fifo_depths is None:
+        fifo_depths = getattr(rc, "fifo_depths", None)
+    primary_depth = rc.fifo_depth if fifo_depth is None else fifo_depth
+    depths = tuple(dict.fromkeys(fifo_depths)) if fifo_depths \
+        else (primary_depth,)
+    if primary_depth not in depths:
+        primary_depth = depths[0]
     seed = rc.seed if seed is None else seed
     max_candidates = rc.max_candidates if max_candidates is None \
         else max_candidates
@@ -494,13 +547,15 @@ def explore_plans(
     plans = enumerate_plans(cdfg, base_plan, max_candidates)
     candidates: list[DseCandidate] = []
     baseline: DseCandidate | None = None
-    sim_list: list[tuple[DseCandidate, list[SimStage]]] = []
+    #: one entry per simulated stage list: (per-depth candidates, stages)
+    sim_list: list[tuple[dict[int, DseCandidate], list[SimStage]]] = []
+    n_pairs = 0
     for moves, plan in plans:
-        if len(candidates) >= max_candidates and baseline is not None:
+        if n_pairs >= max_candidates and baseline is not None:
             break
         dup_effect = None
         for dup in dup_options:
-            if len(candidates) >= max_candidates and baseline is not None:
+            if n_pairs >= max_candidates and baseline is not None:
                 break
             part = materialize(cdfg, plan)
             if dup:
@@ -511,31 +566,41 @@ def explore_plans(
                 # variant would be byte-identical — don't burn budget
                 # (and a redundant solve) on it
                 continue
-            res = partition_resources(part, fifo_depth)
-            cand = DseCandidate(
-                groups=plan_signature(plan),
-                moves=moves + (() if dup == duplicate_base
-                               else ("duplicate" if dup
-                                     else "no-duplicate",)),
-                duplicate=dup, resources=res, plan=plan)
-            is_base = not moves and dup == duplicate_base
-            cand.pruned = constraint_violation(res, rc)
-            # the baseline is always simulated — it is the comparison
-            # point even when it violates the constraints
-            if cand.pruned is None or is_base:
-                sim_list.append((cand, sim_stages_for_partition(
+            n_pairs += 1
+            is_base_pair = not moves and dup == duplicate_base
+            to_sim: dict[int, DseCandidate] = {}
+            for d in depths:
+                res = partition_resources(part, d)
+                cand = DseCandidate(
+                    groups=plan_signature(plan),
+                    moves=moves + (() if dup == duplicate_base
+                                   else ("duplicate" if dup
+                                         else "no-duplicate",)),
+                    duplicate=dup, resources=res, fifo_depth=d,
+                    plan=plan)
+                is_base = is_base_pair and d == primary_depth
+                cand.pruned = constraint_violation(res, rc)
+                # the baseline is always simulated — it is the
+                # comparison point even when it violates the constraints
+                if cand.pruned is None or is_base:
+                    to_sim[d] = cand
+                if is_base:
+                    baseline = cand
+                candidates.append(cand)
+            if to_sim:
+                sim_list.append((to_sim, sim_stages_for_partition(
                     part, node_traces, cyclic_mem)))
-            if is_base:
-                baseline = cand
-            candidates.append(cand)
     # one chunk-major pass simulates every survivor, sharing trace
     # resolution across candidates (and with past/future runs via the
-    # per-op rescache)
+    # chunk-granular rescache); each candidate's depth grid shares one
+    # fold and warm-starts shallower depths from deeper fixed points
     cycles, eval_stats = evaluate_candidates(
         [st for _, st in sim_list], mem, n_iters,
-        fifo_depth=fifo_depth, seed=seed, use_rescache=use_rescache)
-    for (cand, _), cyc in zip(sim_list, cycles):
-        cand.cycles = cyc
+        depth_lists=[tuple(by_depth) for by_depth, _ in sim_list],
+        seed=seed, use_rescache=use_rescache)
+    for (by_depth, _), cyc in zip(sim_list, cycles):
+        for d, cand in by_depth.items():
+            cand.cycles = cyc[d]
     stats1 = _rc.stats()
 
     # cycles-vs-FIFO-bits front over feasible evaluated candidates
@@ -550,8 +615,8 @@ def explore_plans(
             front.append(c)
     return DseResult(
         baseline=baseline, candidates=candidates, front=front,
-        n_iters=n_iters, fifo_depth=fifo_depth, mem_name=mem.name,
-        wall_s=time.perf_counter() - t0,
+        n_iters=n_iters, fifo_depth=primary_depth, mem_name=mem.name,
+        fifo_depths=depths, wall_s=time.perf_counter() - t0,
         rescache_hits=stats1["mem_hits"] + stats1["disk_hits"]
         - stats0["mem_hits"] - stats0["disk_hits"],
         rescache_misses=stats1["misses"] - stats0["misses"],
@@ -592,6 +657,7 @@ def explore(
     mem: MemoryModel | None = None,
     n_iters: int | None = None,
     fifo_depth: int | None = None,
+    fifo_depths: Sequence[int] | None = None,
     seed: int | None = None,
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
@@ -599,7 +665,10 @@ def explore(
     """``Compiled.explore`` implementation: explore re-partitionings of
     ``compiled``'s kernel and return the cycles-vs-FIFO-bits Pareto
     front with a ``Compiled`` artifact attached to every front (and the
-    best) candidate."""
+    best) candidate.  Pass ``fifo_depths=[...]`` for the joint
+    partition×depth front (each candidate costed and simulated at every
+    depth; the channel FIFO depth becomes a search axis instead of a
+    fixed parameter)."""
     rc = constraints or compiled.options.dse or ResourceConstraints()
     n_iters = rc.n_iters if n_iters is None else n_iters
     seed = rc.seed if seed is None else seed
@@ -610,7 +679,8 @@ def explore(
         compiled.cdfg, compiled.context.plan,
         constraints=rc, mem=mem, node_traces=node_traces,
         duplicate_base=compiled.options.duplicate_cheap,
-        n_iters=n_iters, fifo_depth=fifo_depth, seed=seed,
+        n_iters=n_iters, fifo_depth=fifo_depth,
+        fifo_depths=fifo_depths, seed=seed,
         max_candidates=max_candidates, use_rescache=use_rescache)
     for cand in {id(c): c for c in result.front + [result.best()]}.values():
         if cand.compiled is None:

@@ -40,11 +40,17 @@ class ResourceConstraints:
     ``Compiled.explore`` accepts overrides):
       ``n_iters``        — iterations simulated per candidate.
       ``fifo_depth``     — FIFO depth candidates are costed/simulated at.
+      ``fifo_depths``    — joint partition×depth search: cost and
+        simulate every candidate at every listed depth (the depth
+        becomes a search axis; the Pareto front spans both).  ``None``
+        keeps the single-depth search at ``fifo_depth``.
       ``mem``            — memory-model name from
         :func:`repro.core.simulator.standard_memory_models`.
       ``max_candidates`` — enumeration budget (BFS over merge/split
         moves from the Algorithm 1 plan; the fused and maximal
-        degenerate plans are always included).
+        degenerate plans are always included).  Counts (plan,
+        duplicate) pairs; the depth grid multiplies evaluated points,
+        not the budget.
       ``seed``           — simulation seed.
     """
 
@@ -54,9 +60,15 @@ class ResourceConstraints:
     max_stages: int | None = None
     n_iters: int = 4096
     fifo_depth: int = 8
+    fifo_depths: Any = None
     mem: str = "ACP"
     max_candidates: int = 64
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.fifo_depths is not None:
+            object.__setattr__(self, "fifo_depths",
+                               tuple(self.fifo_depths))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -378,6 +378,8 @@ def sweep_schedule(
     max_outstandings: Iterable[int] | None = None,
     collect_stalls: bool = True,
     use_rescache: bool | None = None,
+    workers: int | None = None,
+    depth_incremental: bool = True,
 ) -> SweepResult:
     """Grid-run the cycle simulator over memory models (§V: ACP / HP,
     ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes × port bandwidths
@@ -394,8 +396,13 @@ def sweep_schedule(
     conventional engine has no FIFOs and ignores both SCC classification
     and the decoupled-port knobs, so one simulation per memory model
     covers its share of the grid.  Resolved traces are further memoized
-    across calls and processes via :mod:`repro.core.rescache`
-    (``use_rescache=False`` opts out).
+    across calls, iteration counts (prefix serving), and processes via
+    :mod:`repro.core.rescache` (``use_rescache=False`` opts out).
+
+    ``workers > 1`` shards the dataflow resolution across a process
+    pool (the chunk-graph executor — bit-identical, multi-core);
+    ``depth_incremental`` (default) warm-starts each FIFO-depth lane
+    from the adjacent deeper lane's fixed point.
     """
     mems = dict(mems) if mems is not None else standard_memory_models()
     fifo_depths = tuple(fifo_depths)
@@ -436,7 +443,8 @@ def sweep_schedule(
         grid = simulate_dataflow_many(
             stages, vmems, n_iters, fifo_depths=fifo_depths,
             freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
-            use_rescache=use_rescache)
+            use_rescache=use_rescache, workers=workers,
+            depth_incremental=depth_incremental)
         for vn, (mn, wpc, mo) in variants.items():
             cv = conv[mn]
             m = vmems[vn]

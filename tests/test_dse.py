@@ -256,6 +256,41 @@ def test_explore_cycles_bit_identical_to_fresh_simulation(rescache_on):
         assert fresh.cycles == cand.cycles
 
 
+def test_joint_partition_depth_front(rescache_on):
+    """``explore(fifo_depths=[...])``: the joint partition×depth search.
+    Every (plan, duplicate) pair is costed and simulated at every depth,
+    the front is non-dominated across both axes, and every front point
+    is bit-identical to a fresh cold simulation at its depth."""
+    c = _compiled_spmv()
+    depths = (4, 8, 32)
+    res = c.explore(n_iters=1200, max_candidates=8, fifo_depths=depths)
+    assert tuple(res.fifo_depths) == depths
+    assert {x.fifo_depth for x in res.candidates} == set(depths)
+    assert len(res.candidates) % len(depths) == 0  # pairs × depths
+    bits = [f.fifo_bits for f in res.front]
+    cyc = [f.cycles for f in res.front]
+    assert bits == sorted(bits)
+    assert cyc == sorted(cyc, reverse=True)
+    nt = traces_by_node(c.cdfg, c.partition, None, n_iters=1200, seed=0)
+    from repro.dataflow.schedule import _cyclic_nodes
+    cyc_mem = {n for n in _cyclic_nodes(c.cdfg)
+               if c.cdfg.node(n).is_memory}
+    for cand in res.front:
+        assert cand.compiled is not None
+        stages = sim_stages_for_partition(cand.compiled.partition, nt,
+                                          cyc_mem)
+        fresh = simulate_dataflow(stages, acp(), 1200,
+                                  fifo_depth=cand.fifo_depth,
+                                  collect_stalls=False,
+                                  use_rescache=False)
+        assert fresh.cycles == cand.cycles, cand.fifo_depth
+    # depth grids ride in ResourceConstraints (frozen, hashable) too
+    rcon = ResourceConstraints(fifo_depths=[4, 16], n_iters=600)
+    assert hash(rcon) is not None
+    res2 = c.explore(constraints=rcon, max_candidates=4)
+    assert {x.fifo_depth for x in res2.candidates} == {4, 16}
+
+
 def test_constraints_prune_before_simulation():
     c = _compiled_spmv()
     limit = 64

@@ -84,44 +84,46 @@ def test_cached_vs_uncached_identical(cache_dir):
 def test_key_invalidates_on_model_and_seed(cache_dir):
     """Every memory-model field that reaches the resolved per-access
     latencies must change the key (no false sharing); the model's *name*
-    and the fold-only fields (bandwidth, outstanding cap, posted writes
-    for the dataflow engine) must not — those variants legitimately share
-    one per-op artifact."""
+    and the fold-only fields (bandwidth, outstanding cap, store-buffer
+    depth, posted writes) must not — those variants legitimately share
+    one artifact.  Since v3 the iteration count is not part of the key
+    either: chunk records serve any prefix."""
     stages = _pipeline(seed=7)
     base = acp()
-    key0 = rc.resolution_key("dataflow", stages, base, 0, 1000)
+    key0 = rc.resolution_key("dataflow", stages, base, 0)
     renamed = acp()
     renamed.name = "something-else"
-    assert rc.resolution_key("dataflow", stages, renamed, 0, 1000) == key0
-    assert rc.resolution_key("dataflow", stages, base, 1, 1000) != key0
-    assert rc.resolution_key("dataflow", stages, base, 0, 999) != key0
+    assert rc.resolution_key("dataflow", stages, renamed, 0) == key0
+    assert rc.resolution_key("dataflow", stages, base, 1) != key0
     for field, value in [("port_latency", 26), ("dram_latency", 66),
                          ("backing_hit_rate", 0.5)]:
         m = acp()
         setattr(m, field, value)
-        assert rc.resolution_key("dataflow", stages, m, 0, 1000) != key0, \
+        assert rc.resolution_key("dataflow", stages, m, 0) != key0, \
             field
-    # fold-only fields share the artifact (v2 per-op keying)
+    # fold-only fields share the artifact (per-op keying)
     for field, value in [("words_per_cycle", 0.5), ("max_outstanding", 4),
-                         ("posted_writes", False)]:
+                         ("posted_writes", False),
+                         ("store_buffer_depth", 2)]:
         m = acp()
         setattr(m, field, value)
-        assert rc.resolution_key("dataflow", stages, m, 0, 1000) == key0, \
+        assert rc.resolution_key("dataflow", stages, m, 0) == key0, \
             field
-    # ...but posted_writes keys the conventional engine's stall summary
+    # since v3 the conventional artifact stores raw latencies, so
+    # posted_writes is fold-only there too — the variants share
     m = acp()
     m.posted_writes = False
-    assert rc.resolution_key("conventional", stages, m, 0, 1000) != \
-        rc.resolution_key("conventional", stages, acp(), 0, 1000)
+    assert rc.resolution_key("conventional", stages, m, 0) == \
+        rc.resolution_key("conventional", stages, acp(), 0)
     m = acp_cache()
-    k1 = rc.resolution_key("dataflow", stages, m, 0, 1000)
+    k1 = rc.resolution_key("dataflow", stages, m, 0)
     assert k1 != key0
     m2 = acp_cache()
     m2.cache.write_allocate = False
-    assert rc.resolution_key("dataflow", stages, m2, 0, 1000) != k1
+    assert rc.resolution_key("dataflow", stages, m2, 0) != k1
     # trace content is part of the key
     other = _pipeline(seed=8)
-    assert rc.resolution_key("dataflow", other, base, 0, 1000) != key0
+    assert rc.resolution_key("dataflow", other, base, 0) != key0
     # stage latency and II are NOT: they never reach the resolved arrays,
     # and neither is the stage *grouping* — regrouping the same ops in the
     # same stream order (a DSE merge) shares the artifact
@@ -129,16 +131,16 @@ def test_key_invalidates_on_model_and_seed(cache_dir):
     for st in relat:
         st.latency += 3
         st.ii += 2
-    assert rc.resolution_key("dataflow", relat, base, 0, 1000) == key0
+    assert rc.resolution_key("dataflow", relat, base, 0) == key0
     merged = [SimStage("m", ii=1, latency=5,
                        accesses=[a for st in _pipeline(seed=7)
                                  for a in st.accesses])]
-    assert rc.resolution_key("dataflow", merged, base, 0, 1000) == key0
+    assert rc.resolution_key("dataflow", merged, base, 0) == key0
     # a serialized (mem-in-SCC) op resolves differently: key must differ
     ser = _pipeline(seed=7)
     ser[0] = SimStage(ser[0].name, ii=ser[0].ii, latency=ser[0].latency,
                       accesses=ser[0].accesses, mem_in_scc=True)
-    assert rc.resolution_key("dataflow", ser, base, 0, 1000) != key0
+    assert rc.resolution_key("dataflow", ser, base, 0) != key0
 
 
 def test_trace_fingerprint_generated_vs_materialized():
@@ -195,8 +197,9 @@ def test_artifact_size_gate(cache_dir):
 
 
 def test_summaries_conventional_and_processor(cache_dir):
-    """Conventional/processor runs memoize tiny summaries; warm results
-    are bit-identical and rebuilt for different instrs_per_iter."""
+    """Conventional/processor runs memoize chunk records (per-access
+    latencies / hit levels); warm results are bit-identical and the
+    processor cycle count is rebuilt for different instrs_per_iter."""
     stages = _pipeline(seed=10)
     c0 = simulate_conventional(stages, acp_cache(), 3000)
     c1 = simulate_conventional(stages, acp_cache(), 3000)
