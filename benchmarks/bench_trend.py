@@ -140,6 +140,37 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                 notes.append(f"worker scaling on {cw.get('cpus')} cpus: "
                              f"{ps:.2f}x -> {cs:.2f}x")
 
+    # --- serving smoke ------------------------------------------------------
+    # same posture as worker_scaling: the daemon is scheduling-only, so
+    # identity and exactly-once are correctness gates (hard fail on the
+    # current run alone), only the wall is trend-compared
+    psv, csv = prev.get("serving"), cur.get("serving")
+    if csv:
+        if csv.get("identical") is False:
+            failures.append(
+                "serving: served sweep rows disagree with library mode "
+                "— the resolution daemon must be bit-identical")
+        if csv.get("exactly_once") is False:
+            failures.append(
+                "serving: racing clients did not resolve the shared "
+                "keyset exactly once (in-flight dedup broke: "
+                f"cold={csv.get('cold_chunks')} store="
+                f"{csv.get('store_chunks')} "
+                f"inflight={csv.get('inflight_dedup')})")
+        if csv.get("clean_teardown") is False:
+            failures.append("serving: daemon did not shut down cleanly")
+        if psv and psv.get("smoke") == csv.get("smoke"):
+            pv, cv = psv.get("wall_s"), csv.get("wall_s")
+            if pv and cv and pv >= WALL_FLOOR_S and cv / pv > WALL_TOL:
+                failures.append(f"serving wall_s: {pv:.1f} -> {cv:.1f} "
+                                f"({cv / pv:.1f}x)")
+            notes.append(
+                f"serving: inflight dedup "
+                f"{psv.get('inflight_dedup')} -> "
+                f"{csv.get('inflight_dedup')} chunks, wall "
+                f"{pv:.1f}s -> {cv:.1f}s" if pv and cv else
+                "serving: compared")
+
     # --- vectorized-engine throughput --------------------------------------
     # gate on the reference-vs-vectorized *speedup ratio* rather than raw
     # iters/s: both numerator and denominator see the same runner noise,

@@ -143,7 +143,7 @@ def _sim_task(task: tuple) -> tuple:
     single shared pass — a top-level function so a spawn-based process
     pool can run the grid.  ``workers > 1`` additionally shards the
     dataflow group's resolution over the chunk-graph executor."""
-    kname, what, full, workers = task
+    kname, what, full, workers, server = task
     t0 = time.perf_counter()
     k = _make_kernel(kname)
     n = k.n_iters_full if full else k.n_iters_sim
@@ -156,7 +156,7 @@ def _sim_task(task: tuple) -> tuple:
         grid = simulate_dataflow_many(df_stages, _dataflow_mems(), n,
                                       fifo_depths=(FIFO_DEPTH,),
                                       collect_stalls=False,
-                                      workers=workers)
+                                      workers=workers, server=server)
         r = {mn: grid[(mn, FIFO_DEPTH)] for mn in MEM_NAMES}
     else:
         _, conv_stages = build_stages(k, full=full)
@@ -173,6 +173,7 @@ _MACHINE_WEIGHT = {"dataflow": 3.0, "conventional": 1.2, "processor": 1.0}
 def run_all(*, full: bool = True, jobs: int | None = None,
             kernels: tuple[str, ...] | None = None,
             workers: int | None = None,
+            server: str | None = None,
             ) -> tuple[dict, dict, int, int]:
     """The full grid; returns (per-kernel results, per-task seconds,
     resolved job count, resolved per-task resolution workers).
@@ -191,18 +192,20 @@ def run_all(*, full: bool = True, jobs: int | None = None,
         # interleave them and the wall approaches total-CPU / cores
         jobs = min(multiprocessing.cpu_count() + 1, 4) if full \
             else min(2, multiprocessing.cpu_count())
-    if workers is None:
-        # the grid's wall clock IS the Floyd–Warshall dataflow task
-        # (everything else overlaps under it — see task_s in
-        # BENCH_sim.json), so on ≥4 cores always shard it: early in the
-        # run the extra worker processes time-share with the other
-        # tasks, and once only the tail task remains its workers own
-        # the freed cores.  Below 4 cores the streaming engine wins
-        # (sharding pays a second cache replay per chunk).
-        cpus = multiprocessing.cpu_count()
-        workers = 1 if (not full or cpus < 4) \
-            else max(2, cpus // max(1, jobs))
-    tasks = [(kn, what, full, workers) for kn in kernels
+    # the grid's wall clock IS the Floyd–Warshall dataflow task
+    # (everything else overlaps under it — see task_s in
+    # BENCH_sim.json), so on ≥4 cores always shard it: early in the
+    # run the extra worker processes time-share with the other
+    # tasks, and once only the tail task remains its workers own
+    # the freed cores.  Below 4 cores the streaming engine wins
+    # (sharding pays a second cache replay per chunk) — the shared
+    # heuristic in repro.core.chunkgraph.default_workers.
+    from repro.core.chunkgraph import default_workers
+    workers = default_workers(jobs=jobs, explicit=workers, full=full)
+    if server == "auto":
+        from repro.serve import ensure_daemon
+        server = ensure_daemon()
+    tasks = [(kn, what, full, workers, server) for kn in kernels
              for what in ("dataflow", "conventional", "processor")]
     tasks.sort(key=lambda t: -(_make_kernel(t[0]).n_iters_full if full
                                else 1) * _MACHINE_WEIGHT[t[1]])
@@ -306,7 +309,8 @@ def _rescache_disk_stats() -> dict:
 def main(out_path: str | None = "experiments/paper_fig5.json",
          *, quick: bool = False, jobs: int | None = None,
          kernels: tuple[str, ...] | None = None,
-         rescache: bool = True, workers: int | None = None) -> dict:
+         rescache: bool = True, workers: int | None = None,
+         server: str | None = None) -> dict:
     if not rescache:
         # spawn-pool workers inherit the environment, not configure()
         os.environ["REPRO_RESCACHE"] = "0"
@@ -318,7 +322,8 @@ def main(out_path: str | None = "experiments/paper_fig5.json",
     print(f"Fig. 5 grid — {mode}")
     t0 = time.perf_counter()
     results, task_s, jobs_used, workers_used = run_all(
-        full=full, jobs=jobs, kernels=kernels, workers=workers)
+        full=full, jobs=jobs, kernels=kernels, workers=workers,
+        server=server)
     wall_s = time.perf_counter() - t0
     summary = summarize(results)
     print(f"\n{'kernel':<16}{'mem':<10}{'conv/base':>10}{'df/base':>10}"
@@ -347,6 +352,10 @@ def main(out_path: str | None = "experiments/paper_fig5.json",
             "wall_s": wall_s,
             "jobs": jobs_used,
             "resolution_workers": workers_used,
+            "resolution_mode": ("served" if server else
+                                "streaming" if workers_used < 2 else
+                                f"sharded:{workers_used}"),
+            "server": server,
             "task_s": task_s,
             "rescache": rescache,
             "rescache_stats": _rc.stats(),  # parent process; workers own
@@ -378,10 +387,15 @@ def cli() -> dict:
                     help="shard each dataflow task's resolution over N "
                          "processes (chunk-graph executor; default: "
                          "leftover cores after the task pool)")
+    ap.add_argument("--server", default=None, metavar="auto|ADDR",
+                    help="delegate trace resolution to the resolution "
+                         "daemon ('auto' spawns one for this store) — "
+                         "bit-identical results, shared across clients")
     a, _ = ap.parse_known_args()
     return main(a.out, quick=a.quick, jobs=a.jobs,
                 kernels=tuple(a.kernels) if a.kernels else None,
-                rescache=not a.no_rescache, workers=a.workers)
+                rescache=not a.no_rescache, workers=a.workers,
+                server=a.server)
 
 
 if __name__ == "__main__":

@@ -19,8 +19,15 @@ resolution — e.g. ``run.py fig5 --no-rescache`` — for timing runs or
 when a trace generator changed without changing its fingerprinted
 sample; ``--workers N`` shards each dataflow task's resolution over
 the chunk-graph process pool (bit-identical; pays off from ~4 cores
-up).  ``python -c "from repro.core import rescache; rescache.gc()"``
-clears pre-v3 orphans and enforces ``$REPRO_RESCACHE_MAX_BYTES``.
+up), and ``--server auto`` (or an address) delegates resolution to
+the persistent resolution daemon — shared worker pool, cross-client
+in-flight dedup, bit-identical results (see ``docs/serving.md``).
+  serving — serving smoke: one daemon, two racing ``sweep --smoke``
+            clients; asserts bit-identity with library mode and
+            exactly-once resolution (``benchmarks.serving_smoke``)
+  gc      — garbage-collect the rescache store (``run.py gc
+            [--max-bytes N]``: drop pre-v3 orphans, then enforce the
+            byte cap — the flag overrides ``$REPRO_RESCACHE_MAX_BYTES``)
   table2  — Table II analogue (stage/channel/duplication accounting)
   kernels — Pallas-kernel micro-bench CSV (name,us_per_call,derived)
   roofline— the (arch × shape) table from dry-run artifacts (if present)
@@ -64,6 +71,27 @@ def main() -> None:
         print("=" * 72)
         from . import sweep
         sweep.main()
+
+    if "serving" in sections:
+        print("\n" + "=" * 72)
+        print("Serving smoke — daemon + two racing sweep clients")
+        print("=" * 72)
+        from . import serving_smoke
+        serving_smoke.main()
+
+    if "gc" in sections:
+        import argparse
+        import json
+        from repro.core import rescache
+        ap = argparse.ArgumentParser(prog="run.py gc")
+        ap.add_argument("--max-bytes", type=int, default=None,
+                        help="store byte cap for this collection "
+                             "(overrides $REPRO_RESCACHE_MAX_BYTES)")
+        a, _ = ap.parse_known_args()
+        print("=" * 72)
+        print("rescache gc — drop orphans, enforce the byte cap")
+        print("=" * 72)
+        print(json.dumps(rescache.gc(a.max_bytes), indent=1))
 
     if "table2" in sections:
         print("\n" + "=" * 72)

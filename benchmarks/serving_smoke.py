@@ -1,0 +1,165 @@
+"""Serving smoke: the multi-tenant acceptance scenario as a benchmark.
+
+Starts one resolution daemon on a **fresh** store, races two real
+``benchmarks.sweep --smoke --server ADDR`` client processes through it
+(same reduced grid the CI sweep job runs), and checks the serving
+contract end to end:
+
+- both clients' sweep rows are **bit-identical** to each other and to a
+  library-mode (``--no-rescache``, streaming engine) baseline — the
+  daemon is scheduling-only, never semantics;
+- the shared keyset was resolved **exactly once**: the daemon's dedup
+  counters satisfy ``cold == store + inflight`` with ``inflight > 0``
+  (the second tenant attached to the first's in-flight resolution
+  rather than re-resolving or waiting for the store);
+- teardown is clean (``shutdown`` ack + daemon exit).
+
+The daemon is throttled (``--throttle``) so resolution outlives the
+clients' start-up skew — the race window is real on any machine, not
+just a loaded CI runner.  Results land in the ``serving`` section of
+``BENCH_sim.json`` so ``bench_trend.py`` gates serving regressions
+(identity and exactly-once are hard failures, the wall is
+tolerance-gated).  Run directly::
+
+    python -m benchmarks.serving_smoke [--out BENCH_sim.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+BENCH_PATH = "BENCH_sim.json"
+#: Small canonical chunks so the smoke grid spans many scheduling units.
+CHUNK_ITERS = 2048
+#: Per-chunk dispatch throttle: 10 chunks/group ⇒ ≥5 s of in-flight
+#: window per resolution group, far above client start-up skew.
+THROTTLE_S = 0.5
+
+
+def _row_key(r: dict) -> tuple:
+    return (r["kernel"], r["mem"], r["fifo_depth"], r["mem_in_scc"],
+            r["words_per_cycle"], r["max_outstanding"])
+
+
+def _row_val(r: dict) -> tuple:
+    return (r["dataflow_cycles"], r["conventional_cycles"],
+            r["dataflow_stalls"], r["cache_hits"], r["cache_misses"])
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        return {_row_key(r): _row_val(r)
+                for r in json.load(f)["sweep"]["rows"]}
+
+
+def run_smoke(out_path: str = BENCH_PATH,
+              kernels: tuple[str, ...] = ("spmv",)) -> dict:
+    from repro.serve.client import get_stats, ping, shutdown
+
+    t0 = time.perf_counter()
+    work = tempfile.mkdtemp(prefix="serving-smoke-")
+    store = os.path.join(work, "store")
+    sock = os.path.join(tempfile.mkdtemp(prefix="serve-"), "d.sock")
+    env = dict(os.environ,
+               REPRO_RESCACHE_DIR=store,
+               REPRO_CHUNK_ITERS=str(CHUNK_ITERS))
+    daemon = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "daemon",
+         "--socket", sock, "--store-dir", store,
+         "--throttle", str(THROTTLE_S)],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    payload: dict = {"smoke": True, "clients": 2, "kernels": kernels,
+                     "chunk_iters": CHUNK_ITERS,
+                     "throttle_s": THROTTLE_S}
+    try:
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline and not ping(sock):
+            time.sleep(0.2)
+        if not ping(sock):
+            raise RuntimeError("resolution daemon never came up")
+
+        base = [sys.executable, "-m", "benchmarks.sweep", "--smoke",
+                "--kernels", *kernels]
+        clients = [subprocess.Popen(
+            base + ["--server", sock,
+                    "--out", os.path.join(work, f"bench{i}.json")],
+            env=env, stdout=subprocess.DEVNULL,
+            stderr=subprocess.STDOUT) for i in range(2)]
+        for i, p in enumerate(clients):
+            if p.wait(timeout=600):
+                raise RuntimeError(f"served client {i} failed "
+                                   f"(exit {p.returncode})")
+        st = get_stats(sock)
+
+        # library-mode baseline: cold streaming engine, no store, no
+        # daemon — the ground truth the served rows must match
+        lib = subprocess.run(
+            base + ["--no-rescache",
+                    "--out", os.path.join(work, "bench_lib.json")],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.STDOUT)
+        if lib.returncode:
+            raise RuntimeError("library baseline failed "
+                               f"(exit {lib.returncode})")
+
+        served0, served1 = (_rows(os.path.join(work, f"bench{i}.json"))
+                            for i in range(2))
+        library = _rows(os.path.join(work, "bench_lib.json"))
+        ded = st["dedup"]
+        payload.update({
+            "identical": served0 == served1 == library,
+            "exactly_once": (ded["inflight_chunks"] > 0
+                             and ded["cold_chunks"]
+                             == ded["store_chunks"]
+                             + ded["inflight_chunks"]),
+            "inflight_dedup": ded["inflight_chunks"],
+            "store_chunks": ded["store_chunks"],
+            "cold_chunks": ded["cold_chunks"],
+            "dedup_hit_rate": ded["hit_rate"],
+            "requests": len(st["requests"]),
+            "jobs_completed": st["jobs_completed"],
+            "worker_restarts": st["failures"]["worker_restarts"],
+            "rows_compared": len(library),
+        })
+    finally:
+        clean = shutdown(sock)
+        try:
+            daemon.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            daemon.kill()
+            clean = False
+        payload["clean_teardown"] = clean
+        shutil.rmtree(work, ignore_errors=True)
+    payload["wall_s"] = time.perf_counter() - t0
+
+    from .sweep import update_bench
+    update_bench("serving", payload, out_path)
+    print(f"serving smoke: identical={payload.get('identical')} "
+          f"exactly_once={payload.get('exactly_once')} "
+          f"inflight={payload.get('inflight_dedup')} "
+          f"cold={payload.get('cold_chunks')} "
+          f"teardown={payload['clean_teardown']} "
+          f"({payload['wall_s']:.1f}s); wrote {out_path}")
+    if not (payload.get("identical") and payload.get("exactly_once")
+            and payload["clean_teardown"]):
+        raise SystemExit("serving smoke FAILED: " + json.dumps(payload))
+    return payload
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=BENCH_PATH)
+    ap.add_argument("--kernels", nargs="*", default=None)
+    a, _ = ap.parse_known_args()
+    return run_smoke(out_path=a.out,
+                     kernels=tuple(a.kernels or ("spmv",)))
+
+
+if __name__ == "__main__":
+    main()

@@ -123,7 +123,7 @@ def _sweep_task(task: tuple) -> list[dict]:
     ``n_iters_simulated`` so trend comparisons never silently mix
     scales."""
     (kname, mem_name, fifo_depths, scc_modes, n_iters,
-     wpcs, mos, workers) = task
+     wpcs, mos, workers, server) = task
     k = _make_kernel(kname)
     n = n_iters or k.n_iters_full
     traces = k.full_traces
@@ -136,7 +136,7 @@ def _sweep_task(task: tuple) -> list[dict]:
                          traces=list(traces.values()),
                          max_outstanding=MAX_OUTSTANDING,
                          words_per_cycle=wpcs, max_outstandings=mos,
-                         workers=workers)
+                         workers=workers, server=server)
     for row in res.rows:
         row["kernel"] = kname
         row["n_iters"] = n
@@ -186,7 +186,8 @@ def run_dse(*, smoke: bool = False,
             kernels: tuple[str, ...] | None = None,
             out_path: str = BENCH_PATH,
             max_candidates: int = 16,
-            rescache: bool = True) -> dict:
+            rescache: bool = True,
+            server: str | None = None) -> dict:
     """Partition-space DSE over the paper kernels (``--dse``).
 
     Per kernel: explore merge/split/duplicate re-partitionings of the
@@ -256,7 +257,8 @@ def run_dse(*, smoke: bool = False,
         te = time.perf_counter()
         res = compiled.explore(
             n_iters=n, traces=list(traces.values()), mem=mem,
-            fifo_depth=fifo_depth, max_candidates=max_candidates)
+            fifo_depth=fifo_depth, max_candidates=max_candidates,
+            server=server)
         explore_s = time.perf_counter() - te  # incl. front Compiled
         entry = res.to_json()                 # artifact materialization
         entry["single_cold_s"] = cold_s
@@ -282,12 +284,19 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
               words_per_cycle: tuple[float, ...] | None = None,
               max_outstandings: tuple[int, ...] | None = None,
               rescache: bool = True,
-              workers: int | None = None) -> dict:
+              workers: int | None = None,
+              server: str | None = None) -> dict:
     from .paper_kernels import ALL_KERNELS
     if not rescache:
         os.environ["REPRO_RESCACHE"] = "0"  # spawn workers inherit env
         from repro.core import rescache as _rc
         _rc.configure(enabled=False)
+    if server == "auto":
+        # spawn (or find) the daemon for this store up front, then hand
+        # every task the concrete address — job subprocesses must not
+        # race to spawn their own
+        from repro.serve import ensure_daemon
+        server = ensure_daemon()
     kernels = tuple(kernels or ALL_KERNELS)
     if smoke:
         kernels = kernels[:2]
@@ -300,7 +309,7 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
         mems = tuple(standard_memory_models())
         fifo_depths, scc_modes, n_iters = FIFO_DEPTHS, SCC_MODES, None
     tasks = [(kn, mn, fifo_depths, scc_modes, n_iters,
-              words_per_cycle, max_outstandings, workers)
+              words_per_cycle, max_outstandings, workers, server)
              for kn in kernels for mn in mems]
     if jobs is None:
         jobs = 1 if smoke else min(2, multiprocessing.cpu_count())
@@ -340,10 +349,19 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
     perf = measure_perf()
     scaling = measure_worker_scaling()
     payload = {"smoke": smoke, "wall_s": time.perf_counter() - t0,
-               "workers": workers, "rows": rows, "pareto": fronts}
+               "workers": workers, "server": server, "rows": rows,
+               "pareto": fronts}
     update_bench("sweep", payload, out_path)
     update_bench("perf", perf, out_path)
     update_bench("worker_scaling", scaling, out_path)
+    if server:
+        # the daemon's own telemetry (dedup rates, utilization, queue
+        # wall) rides along so bench_trend can gate the serving path
+        from repro.serve import ServeUnavailable, get_stats
+        try:
+            update_bench("serving_stats", get_stats(server), out_path)
+        except ServeUnavailable:
+            pass
     print(f"worker scaling: workers=1 {scaling['workers1_s']:.1f}s, "
           f"workers={scaling['workers_all']} "
           f"{scaling['workers_all_s']:.1f}s "
@@ -380,6 +398,12 @@ def main() -> dict:
                     help="shard trace resolution over N processes per "
                          "sweep task (the chunk-graph executor; "
                          "bit-identical results)")
+    ap.add_argument("--server", default=None, metavar="auto|ADDR",
+                    help="delegate trace resolution to the resolution "
+                         "daemon ('auto' spawns one for this store; "
+                         "else an AF_UNIX path or host:port) — shared "
+                         "pool, cross-client in-flight dedup, "
+                         "bit-identical results")
     ap.add_argument("--dse", action="store_true",
                     help="also run the partition-space DSE and record "
                          "the Pareto fronts in BENCH_sim.json")
@@ -389,6 +413,10 @@ def main() -> dict:
     a, _ = ap.parse_known_args()
     kernels = tuple(a.kernels) if a.kernels else None
     out: dict = {}
+    server = a.server
+    if server == "auto":
+        from repro.serve import ensure_daemon
+        server = ensure_daemon()
     if not a.dse_only:
         out = run_sweep(smoke=a.smoke, jobs=a.jobs,
                         kernels=kernels,
@@ -398,12 +426,13 @@ def main() -> dict:
                         max_outstandings=(tuple(a.max_outstandings)
                                           if a.max_outstandings else None),
                         rescache=not a.no_rescache,
-                        workers=a.workers)
+                        workers=a.workers, server=server)
     if a.dse or a.dse_only:
         out["dse"] = run_dse(smoke=a.smoke, kernels=kernels,
                              out_path=a.out,
                              max_candidates=a.dse_candidates,
-                             rescache=not a.no_rescache)
+                             rescache=not a.no_rescache,
+                             server=server)
     return out
 
 

@@ -58,10 +58,35 @@ import numpy as np
 #: per-op matrices are in flight).
 _WINDOW = 2
 
+#: Chunk re-dispatches tolerated per run after worker deaths (OOM
+#: kills, segfaults) before the run hard-fails instead of looping —
+#: every retry is counted in ``rescache.census()["worker_retries"]``.
+RETRY_BUDGET = 3
+
 #: Completed pool executions in this process — lets tests assert the
 #: sharded path actually engaged rather than silently falling back to
 #: the streaming engine (missing cloudpickle, too few chunks, …).
 _POOL_RUNS = 0
+
+
+def default_workers(*, cpus: int | None = None, jobs: int = 1,
+                    explicit: int | None = None,
+                    full: bool = True) -> int:
+    """The ``--workers`` default heuristic, shared by every benchmark
+    driver: intra-task sharding pays a second cache replay per chunk,
+    which is an honest *slowdown* on <4-core machines (0.19× measured
+    on the 2-core CI container — see ``worker_scaling`` in
+    BENCH_sim.json), so auto-sharding falls back to the streaming
+    engine unless the machine has ≥ 4 cores or the user passed an
+    explicit count.  ``jobs`` is the concurrent task-pool width the
+    workers share the cores with."""
+    if explicit is not None:
+        return max(1, explicit)
+    if cpus is None:
+        cpus = multiprocessing.cpu_count()
+    if not full or cpus < 4:
+        return 1
+    return max(2, cpus // max(1, jobs))
 
 
 def _compose_state(older, newer):
@@ -269,8 +294,12 @@ def simulate_dataflow_sharded(
     for pr in procs:
         pr.start()
 
+    #: chunk -> worker; seeded round-robin, rewritten when a dead
+    #: worker's in-flight chunks are re-dispatched
+    owner_of: dict[int, int] = {}
+
     def owner(k: int) -> int:
-        return (k - first_live) % W
+        return owner_of.setdefault(k, (k - first_live) % W)
 
     folder = _OpFolder(stages)
     live_cold: set[int] = set()  # live chunks, for the store census
@@ -322,6 +351,13 @@ def simulate_dataflow_sharded(
     geo_cum = {geo: (sim.hits, sim.misses)
                for geo, sim in resolver.caches.items()}
     final_cums: dict[str, dict] = {}
+    #: master-side replay log for worker-death recovery: every state /
+    #: draws message stays addressable until its chunk's ``done``
+    #: arrives, so a respawned worker can be fed the exact same
+    #: messages (bit-identical replay; bounded by ``W * _WINDOW``)
+    sent_state: dict[int, dict] = {}
+    sent_draws: dict[int, dict] = {}
+    retries = 0
 
     dispatched = first_live
     state_sent = first_live
@@ -341,7 +377,8 @@ def simulate_dataflow_sharded(
             nonlocal state_sent, draws_sent
             while state_sent < dispatched and state_sent in state_at:
                 k = state_sent
-                task_qs[owner(k)].put(("state", k, state_at[k] or {}))
+                sent_state[k] = state_at[k] or {}
+                task_qs[owner(k)].put(("state", k, sent_state[k]))
                 state_sent += 1
             while draws_sent < dispatched and draws_sent in deltas:
                 k = draws_sent
@@ -363,9 +400,11 @@ def simulate_dataflow_sharded(
                 for geo, d in deltas[k].items():
                     h, m = geo_cum[geo]
                     geo_cum[geo] = (h + d[0], m + d[1])
+                sent_draws[k] = msg
                 task_qs[owner(k)].put(("draws", k, msg))
                 del deltas[k]  # fully consumed: keep the master O(W)
                 n_addrs.pop(k, None)
+                effects.pop(k, None)  # duplicate after a retry replay
                 draws_sent += 1
             # a state snapshot is dead once it was sent and composed
             # into its successor — prune so a thousand-chunk run keeps
@@ -390,14 +429,41 @@ def simulate_dataflow_sharded(
                 pump_sends()
                 continue
             try:
-                msg = result_q.get(timeout=30)
+                msg = result_q.get(timeout=5)
             except queue.Empty:
                 dead = [w for w, pr in enumerate(procs)
                         if not pr.is_alive()]
-                if dead:  # died without posting (OOM kill, segfault)
-                    failure = (f"worker(s) {dead} exited with code(s) "
-                               f"{[procs[w].exitcode for w in dead]}")
+                if not dead:
+                    continue
+                # died without posting (OOM kill, segfault): respawn
+                # the slot and replay its in-flight chunks' messages
+                # verbatim — resolution is deterministic, so the retry
+                # is bit-identical — under a bounded budget
+                redo = [k for k in range(solved, dispatched)
+                        if k not in done and owner_of.get(k) in dead]
+                retries += len(redo)
+                _rc.note_worker_retries(len(redo))
+                if retries > RETRY_BUDGET:
+                    failure = (
+                        f"worker(s) {dead} exited with code(s) "
+                        f"{[procs[w].exitcode for w in dead]}; retry "
+                        f"budget exhausted ({retries} > {RETRY_BUDGET})")
                     break
+                for w in dead:
+                    task_qs[w] = ctx.Queue()
+                    procs[w] = ctx.Process(
+                        target=_worker_main,
+                        args=(payload, task_qs[w], result_q),
+                        daemon=True)
+                    procs[w].start()
+                for k in sorted(redo):
+                    w = owner_of[k]
+                    task_qs[w].put(
+                        ("task", k, k * C, min((k + 1) * C, n_iters)))
+                    if k < state_sent:
+                        task_qs[w].put(("state", k, sent_state[k]))
+                    if k < draws_sent:
+                        task_qs[w].put(("draws", k, sent_draws[k]))
                 continue
             kind = msg[0]
             if kind == "error":
@@ -405,6 +471,8 @@ def simulate_dataflow_sharded(
                 break
             if kind == "effect":
                 _, k, eff, na = msg
+                if k + 1 in state_at or k < draws_sent:
+                    continue  # duplicate from a retried chunk
                 effects[k] = eff
                 n_addrs[k] = na
                 while (k + 1 not in state_at) and k in state_at \
@@ -413,9 +481,13 @@ def simulate_dataflow_sharded(
                                                      effects.pop(k))
                     k += 1
             elif kind == "replay":
-                deltas[msg[1]] = msg[2]
+                if msg[1] >= draws_sent:  # else: retry duplicate
+                    deltas[msg[1]] = msg[2]
             elif kind == "done":
-                done[msg[1]] = (msg[2], msg[3])
+                if msg[1] >= solved:
+                    done[msg[1]] = (msg[2], msg[3])
+                    sent_state.pop(msg[1], None)
+                    sent_draws.pop(msg[1], None)
             pump_sends()
         if failure is not None:
             raise RuntimeError(

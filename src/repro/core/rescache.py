@@ -115,8 +115,11 @@ SAMPLE_LEN = 4096
 #: Canonical chunk granularity of stored artifacts (iterations).  Every
 #: producer emits records on these boundaries no matter how the run
 #: itself was chunked, so artifacts written at any ``chunk_iters`` (and
-#: by any worker of the sharded executor) tile identically.
-CHUNK_ITERS = 1 << 20
+#: by any worker of the sharded executor) tile identically.  The env
+#: override exists for cross-process harnesses (the serving smoke test
+#: shrinks the grid so a 20k-iteration run spans many chunks); every
+#: process sharing one store must agree on the value.
+CHUNK_ITERS = int(os.environ.get("REPRO_CHUNK_ITERS", str(1 << 20)))
 
 _KEY_VERSION = "rescache-v3"
 
@@ -149,7 +152,11 @@ _stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "stores": 0,
           "too_large": 0, "disk_errors": 0,
           #: chunks resolved live (cold) vs served from the store —
           #: the store census the benchmarks and acceptance tests read
-          "cold_chunks": 0, "served_chunks": 0}
+          "cold_chunks": 0, "served_chunks": 0,
+          #: chunk re-dispatches after a pool worker died mid-chunk
+          #: (the chunk-graph executor and the resolution daemon both
+          #: respawn and retry under a bounded budget)
+          "worker_retries": 0}
 
 
 def configure(*, enabled: bool | None = None, directory: str | None = None,
@@ -184,6 +191,14 @@ def note_chunks(*, cold: int = 0, served: int = 0) -> None:
     chunks (a prefix-served run must report ``cold == 0``)."""
     _stats["cold_chunks"] += cold
     _stats["served_chunks"] += served
+
+
+def note_worker_retries(n: int = 1) -> None:
+    """Census hook: a pool master re-dispatched ``n`` chunks after a
+    worker died (respawn-and-retry; see the chunk-graph executor and
+    :mod:`repro.serve`).  Surfaced by :func:`census` and the daemon's
+    ``stats`` endpoint so silent worker churn is visible."""
+    _stats["worker_retries"] += n
 
 
 def _disk_cap_bytes() -> int:
@@ -705,4 +720,5 @@ def census() -> dict[str, Any]:
                     pass
     return {"dir": d, "artifacts": len(keys), "chunks": chunks,
             "bytes": total, "cold_chunks": _stats["cold_chunks"],
-            "served_chunks": _stats["served_chunks"]}
+            "served_chunks": _stats["served_chunks"],
+            "worker_retries": _stats["worker_retries"]}

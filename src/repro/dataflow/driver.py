@@ -108,7 +108,9 @@ class Compiled:
     def simulate(self, n_iters: int = 2048, **kwargs: Any) -> SimReport:
         """Discrete-event simulation of this program on the template vs the
         fused conventional engine (see
-        :func:`repro.dataflow.schedule.simulate_schedule`)."""
+        :func:`repro.dataflow.schedule.simulate_schedule`).  Pass
+        ``server="auto"`` (or an address) to pre-resolve traces through a
+        running resolution daemon — see ``docs/serving.md``."""
         return simulate_schedule(self.schedule, n_iters=n_iters, **kwargs)
 
     def sweep(self, **kwargs: Any) -> Any:
@@ -118,7 +120,10 @@ class Compiled:
         the ``simulate`` backend).  Depth lanes solve deepest-first with
         the depth-incremental warm start, and ``workers=N`` shards the
         trace resolution over the chunk-graph process pool
-        (bit-identical; multi-core)."""
+        (bit-identical; multi-core).  ``server="auto"`` (or an address)
+        delegates resolution to a running resolution daemon instead —
+        shared pool, cross-client in-flight dedup, streamed chunks;
+        results stay bit-identical (``docs/serving.md``)."""
         return get_backend("simulate").sweep(self, **kwargs)
 
     def explore(self, **kwargs: Any) -> Any:
@@ -132,7 +137,9 @@ class Compiled:
         Pareto front carries full ``Compiled`` artifacts.  Pass
         ``fifo_depths=[...]`` for the joint partition×FIFO-depth front
         (depth becomes a search axis: every candidate is costed and
-        simulated at every depth, one warm-started solve each)."""
+        simulated at every depth, one warm-started solve each), and
+        ``server="auto"`` to resolve candidate traces through a running
+        resolution daemon first (``docs/serving.md``)."""
         from . import dse as _dse
         return _dse.explore(self, **kwargs)
 

@@ -506,6 +506,7 @@ def explore_plans(
     seed: int | None = None,
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
+    server: str | None = None,
 ) -> DseResult:
     """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate,
     FIFO depth)`` candidates (no ``Compiled`` construction — see
@@ -590,6 +591,20 @@ def explore_plans(
             if to_sim:
                 sim_list.append((to_sim, sim_stages_for_partition(
                     part, node_traces, cyclic_mem)))
+    if server:
+        # resolve every distinct survivor group through the daemon
+        # first (shared spawn-pool, in-flight dedup with concurrent
+        # explorers); the chunk-major pass below then serves the grid
+        # from the store.  Best-effort: a missing daemon or an
+        # over-cap artifact just resolves cold locally as before.
+        from ..serve.client import ServeUnavailable, prefetch
+        addr = None if server == "auto" else server
+        for _, st in sim_list:
+            try:
+                prefetch(st, {mem.name: mem}, n_iters, seed=seed,
+                         address=addr)
+            except ServeUnavailable:
+                break
     # one chunk-major pass simulates every survivor, sharing trace
     # resolution across candidates (and with past/future runs via the
     # chunk-granular rescache); each candidate's depth grid shares one
@@ -661,6 +676,7 @@ def explore(
     seed: int | None = None,
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
+    server: str | None = None,
 ) -> DseResult:
     """``Compiled.explore`` implementation: explore re-partitionings of
     ``compiled``'s kernel and return the cycles-vs-FIFO-bits Pareto
@@ -681,7 +697,8 @@ def explore(
         duplicate_base=compiled.options.duplicate_cheap,
         n_iters=n_iters, fifo_depth=fifo_depth,
         fifo_depths=fifo_depths, seed=seed,
-        max_candidates=max_candidates, use_rescache=use_rescache)
+        max_candidates=max_candidates, use_rescache=use_rescache,
+        server=server)
     for cand in {id(c): c for c in result.front + [result.best()]}.values():
         if cand.compiled is None:
             # the baseline IS the caller's artifact (same plan, same

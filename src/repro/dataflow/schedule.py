@@ -267,9 +267,20 @@ def simulate_schedule(
     microbatches: int = 6,
     seed: int = 0,
     use_rescache: bool | None = None,
+    server: str | None = None,
 ) -> SimReport:
     mem = mem or acp()
     stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    if server:
+        # resolve through the daemon first (shared pool, in-flight
+        # dedup); the local run below then serves from the store —
+        # best-effort, so a missing daemon costs nothing
+        from ..serve.client import ServeUnavailable, prefetch
+        try:
+            prefetch(stages, {"mem": mem}, n_iters, seed=seed,
+                     address=None if server == "auto" else server)
+        except ServeUnavailable:
+            pass
     df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth,
                            seed=seed, use_rescache=use_rescache)
     cv = simulate_conventional([fused_stage(stages)], mem, n_iters,
@@ -380,6 +391,7 @@ def sweep_schedule(
     use_rescache: bool | None = None,
     workers: int | None = None,
     depth_incremental: bool = True,
+    server: str | None = None,
 ) -> SweepResult:
     """Grid-run the cycle simulator over memory models (§V: ACP / HP,
     ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes × port bandwidths
@@ -402,7 +414,12 @@ def sweep_schedule(
     ``workers > 1`` shards the dataflow resolution across a process
     pool (the chunk-graph executor — bit-identical, multi-core);
     ``depth_incremental`` (default) warm-starts each FIFO-depth lane
-    from the adjacent deeper lane's fixed point.
+    from the adjacent deeper lane's fixed point; ``server`` delegates
+    resolution to a running resolution daemon (:mod:`repro.serve` —
+    ``"auto"`` or an explicit address), falling back to the local
+    engines when none answers.  Each row records the engine that
+    actually ran in ``resolution_mode`` (``"served:ADDR"`` /
+    ``"sharded:N"`` / ``"streaming"``).
     """
     mems = dict(mems) if mems is not None else standard_memory_models()
     fifo_depths = tuple(fifo_depths)
@@ -428,6 +445,19 @@ def sweep_schedule(
         [fused_stage(base_stages)], conv_mems, n_iters,
         freq_mhz=freq_mhz, seed=seed, use_rescache=use_rescache)
 
+    # the engine the dataflow grid actually runs on, recorded per row
+    # (satellite of the serving tier: on <4-core machines the workers
+    # heuristic falls back to streaming — make the choice auditable)
+    resolution_mode = "streaming" if not workers or workers < 2 \
+        else f"sharded:{workers}"
+    if server:
+        from ..serve import client as _serve_client
+        addr = None if server == "auto" else server
+        if _serve_client.ping(addr):
+            from ..serve import protocol as _serve_protocol
+            resolution_mode = "served:" + (
+                addr or _serve_protocol.default_address())
+
     rows: list[dict] = []
     for mode in scc_modes:
         stages = _with_scc_mode(base_stages, mode)
@@ -444,7 +474,7 @@ def sweep_schedule(
             stages, vmems, n_iters, fifo_depths=fifo_depths,
             freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
             use_rescache=use_rescache, workers=workers,
-            depth_incremental=depth_incremental)
+            depth_incremental=depth_incremental, server=server)
         for vn, (mn, wpc, mo) in variants.items():
             cv = conv[mn]
             m = vmems[vn]
@@ -467,6 +497,7 @@ def sweep_schedule(
                     "dataflow_stalls": df.total_stalls(),
                     "cache_hits": df.cache_hits,
                     "cache_misses": df.cache_misses,
+                    "resolution_mode": resolution_mode,
                 })
     res = SweepResult(rows, n_iters)
     res.pareto()  # mark the default frontier on the rows

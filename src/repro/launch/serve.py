@@ -1,29 +1,36 @@
-"""Serving driver: batched prefill + decode with a continuous batch queue.
+"""Serving drivers: the resolution daemon CLI and the LM batch demo.
 
-CPU-scale demo (reduced config):
+Resolution daemon (the serving tier of the simulation stack — see
+:mod:`repro.serve` and ``docs/serving.md``):
+
+    PYTHONPATH=src python -m repro.launch.serve daemon \
+        --store-dir ~/.cache/repro-rescache
+    PYTHONPATH=src python -m repro.launch.serve stats      # JSON
+    PYTHONPATH=src python -m repro.launch.serve shutdown
+
+LM serving demo (CPU-scale, reduced config) — batched prefill + decode
+with a continuous batch queue:
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch smollm-135m --reduced --requests 4 --gen 16
 
-Serving is the template end-to-end: request admission is a bounded FIFO
-(HostFIFO), prefill is the burst-access stage, the KV cache is the
-customized memory partition, and decode steps stream it back.
+The demo is the template end-to-end: request admission is a bounded
+FIFO (HostFIFO), prefill is the burst-access stage, the KV cache is the
+customized memory partition, and decode steps stream it back.  The
+heavy imports (jax, the model zoo) are deferred so the daemon
+subcommands start without them.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import logging
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from ..configs.base import load_config, reduced as reduce_config
-from ..dataflow import dataflow_jit
-from ..models import decode_step as _decode, init_params, prefill as _prefill
 
 log = logging.getLogger("repro.serve")
 
@@ -50,10 +57,14 @@ class BatchedServer:
 
     def __init__(self, cfg, params, *, max_len: int = 256,
                  greedy: bool = True):
+        from ..dataflow import dataflow_jit
+        from ..models import decode_step as _decode, prefill as _prefill
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.greedy = greedy
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
         # Both steps go through the dataflow compiler driver.  The "xla"
         # backend executes exactly as jax.jit did, but the Compiled
         # artifact (`.lower(...)`) exposes the Algorithm-1 stage/channel
@@ -69,11 +80,14 @@ class BatchedServer:
 
     def dataflow_report(self, requests: list["Request"]) -> str:
         """Stage/channel report of the decode step for this batch shape."""
+        import jax
+        import jax.numpy as jnp
         B = len(requests)
         tok = jnp.zeros((B,), jnp.int32)
         try:
             _, cache = jax.eval_shape(
-                lambda p, t: _prefill(p, t, self.cfg, self.max_len),
+                lambda p, t: self._prefill_fn(p, t, self.cfg,
+                                              self.max_len),
                 self.params, jax.ShapeDtypeStruct((B, 8), jnp.int32))
             compiled = self._decode.lower(self.params, tok, cache,
                                           jnp.asarray(8, jnp.int32))
@@ -82,6 +96,8 @@ class BatchedServer:
             return f"(dataflow analysis unavailable: {type(e).__name__}: {e})"
 
     def serve(self, requests: list[Request]) -> list[Result]:
+        import jax
+        import jax.numpy as jnp
         B = len(requests)
         S = max(len(r.prompt) for r in requests)
         # left-align prompts; pad right with zeros (masked by position)
@@ -123,15 +139,79 @@ class BatchedServer:
         return outs
 
 
-def main() -> None:
-    logging.basicConfig(level=logging.INFO)
+# ---------------------------------------------------------------------------
+# Resolution daemon CLI
+# ---------------------------------------------------------------------------
+
+def _serve_cli(argv: list[str]) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="resolution daemon control (see docs/serving.md)")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("daemon", help="run the resolution daemon in "
+                                      "the foreground")
+    d.add_argument("--socket", default=None,
+                   help="AF_UNIX path or host:port (default: the "
+                        "store's canonical socket)")
+    d.add_argument("--workers", type=int, default=None,
+                   help="pool width (default: cores - 1, min 2)")
+    d.add_argument("--store-dir", default=None,
+                   help="rescache store directory to serve")
+    d.add_argument("--max-queued-chunks", type=int, default=4096,
+                   help="global admission cap on queued chunks")
+    d.add_argument("--max-client-chunks", type=int, default=4096,
+                   help="per-client outstanding-chunks budget")
+    d.add_argument("--retry-budget", type=int, default=None,
+                   help="chunk re-dispatches tolerated per job after "
+                        "worker deaths")
+    d.add_argument("--throttle", type=float, default=0.0,
+                   help="seconds to sleep before each chunk dispatch "
+                        "(test/debug knob)")
+    for name in ("stats", "shutdown"):
+        sp = sub.add_parser(name)
+        sp.add_argument("--socket", default=None)
+    args = p.parse_args(argv)
+    if args.cmd == "daemon":
+        from ..core import rescache
+        from ..serve import ResolutionDaemon
+        if args.store_dir:
+            rescache.configure(enabled=True, directory=args.store_dir)
+        daemon = ResolutionDaemon(
+            address=args.socket, workers=args.workers,
+            max_queued_chunks=args.max_queued_chunks,
+            max_client_chunks=args.max_client_chunks,
+            retry_budget=args.retry_budget, throttle_s=args.throttle)
+        log.info("resolution daemon at %s (%d workers, store %s)",
+                 daemon.address, daemon.workers, daemon.store_dir)
+        daemon.serve_forever()
+        return 0
+    if args.cmd == "stats":
+        from ..serve import ServeUnavailable, get_stats
+        try:
+            print(json.dumps(get_stats(args.socket), indent=2,
+                             sort_keys=True))
+        except ServeUnavailable as e:
+            print(str(e), file=sys.stderr)
+            return 1
+        return 0
+    from ..serve import shutdown
+    ok = shutdown(args.socket)
+    print("daemon stopped" if ok else "no daemon answered")
+    return 0 if ok else 1
+
+
+def _demo_main(argv: list[str]) -> None:
+    import jax
+    from ..configs.base import load_config, reduced as reduce_config
+    from ..models import init_params
+
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--requests", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
-    args = p.parse_args()
+    args = p.parse_args(argv)
 
     cfg = load_config(args.arch)
     if args.reduced:
@@ -156,6 +236,14 @@ def main() -> None:
           f"decode {results[0].decode_s * 1e3:.1f} ms/tok")
     for r in results[:2]:
         print(f"  req {r.id}: {r.tokens[:8]}...")
+
+
+def main(argv: list[str] | None = None) -> None:
+    logging.basicConfig(level=logging.INFO)
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] in ("daemon", "stats", "shutdown"):
+        raise SystemExit(_serve_cli(argv))
+    _demo_main(argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,166 @@
+"""Pool worker of the resolution daemon.
+
+A *serve* worker is the chunk-graph worker generalized from one run to
+many: it multiplexes chunks of several concurrent **jobs** (one job per
+distinct resolution key set) and processes each phase as a separate
+message instead of blocking for the master's replies — the daemon's
+scheduler interleaves phases of different jobs on one worker, so a long
+Floyd–Warshall tail from one client backfills with another client's
+chunks.
+
+Phase messages (daemon → worker):
+
+* ``("job", jid, payload)`` — install a job context: the cloudpickled
+  stage list + live memory models + seed, a shared resolver, and the
+  v3 chunk writers.
+* ``("task", jid, k, lo, hi)`` — phase A: the chunk's own cache effect
+  from an empty cache (state-free, freely parallel).
+* ``("state", jid, k, lo, hi, st)`` — phase B: replay against the
+  composed incoming state; the replay scratch (hit flags, flattened
+  participation, *end-of-chunk* cache stacks) is saved per ``(jid, k)``
+  so later phases survive interleaving with other chunks' replays.
+* ``("draws", jid, k, msg)`` — phase C: position each model's PCG64
+  stream at its absolute draw offset, materialize latencies, commit the
+  v3 chunk record (or return the matrix inline past the artifact cap).
+* ``("forget", jid)`` / ``("stop",)`` — drop a job / exit.
+
+Chunks are resolved on the **canonical full-chunk grid** (``hi`` is
+always a multiple of ``CHUNK_ITERS``; traces pad with −1 past their
+end), so every committed record is a full chunk: any client's shorter
+``n_iters`` is served as a prefix of the same bits, and a later client
+extending the job never meets a poisoned partial tail.  Results are
+draw-for-draw identical to the streaming engine.
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+import numpy as np
+
+
+def worker_main(wid: int, C: int, task_q, result_q,
+                rescache_cfg: dict) -> None:
+    jid = k = -1
+    try:
+        import cloudpickle
+        from ..core import rescache as _rc
+        from ..core.simulator import _SharedResolver, _lat_itemsize
+        _rc.configure(**rescache_cfg)
+        _rc.CHUNK_ITERS = C
+    except Exception:  # noqa: BLE001 — forwarded verbatim
+        result_q.put(("error", wid, jid, k, traceback.format_exc()))
+        return
+    jobs: dict[int, dict] = {}
+    scratch: dict[tuple[int, int], dict] = {}
+    while True:
+        m = task_q.get()
+        op = m[0]
+        if op == "stop":
+            return
+        t0 = time.perf_counter()
+        try:
+            if op == "job":
+                _, jid, payload = m
+                p = cloudpickle.loads(payload)
+                resolver = _SharedResolver(p["stages"], p["mems"],
+                                           p["seed"], capture=True)
+                writers = {mn: _rc.ChunkWriter(
+                    key, resolver.K, p["n_iters"],
+                    itemsize=_lat_itemsize(p["mems"][mn]))
+                    for mn, key in p["keys"].items() if key is not None}
+                jobs[jid] = {
+                    "resolver": resolver,
+                    "writers": {mn: w for mn, w in writers.items()
+                                if not w.dead},
+                    "mems": p["mems"],
+                }
+            elif op == "forget":
+                _, jid = m
+                jobs.pop(jid, None)
+                for sk in [sk for sk in scratch if sk[0] == jid]:
+                    del scratch[sk]
+            elif op == "task":
+                _, jid, k, lo, hi = m
+                r = jobs[jid]["resolver"]
+                effects, n_addrs = r.chunk_effects(lo, hi)
+                result_q.put(("effect", wid, jid, k, effects, n_addrs,
+                              time.perf_counter() - t0))
+            elif op == "state":
+                _, jid, k, lo, hi, st = m
+                r = jobs[jid]["resolver"]
+                for geo, sim in r.caches.items():
+                    s = st.get(geo)
+                    if s is None:
+                        sim.tags[:] = -1
+                        sim.lru[:] = 0
+                        sim.ticks[:] = 0
+                    else:
+                        sim.import_stacks(s[0], s[1])
+                deltas = r.replay(lo, hi)
+                # everything phase C consumes, snapshotted before any
+                # other chunk's replay overwrites the resolver: the
+                # flattened-access scratch *and* the end-of-chunk cache
+                # stacks (the record's resume state)
+                scratch[(jid, k)] = {
+                    "lo": lo, "hi": hi,
+                    "store_flat": r._store_flat,
+                    "hits_by_key": r._hits_by_key,
+                    "n_addrs": r._n_addrs,
+                    "flat_p": r._flat_p,
+                    "burst_words": r._burst_words,
+                    "end": {geo: sim.export_stacks()
+                            for geo, sim in r.caches.items()},
+                }
+                result_q.put(("replay", wid, jid, k, deltas,
+                              time.perf_counter() - t0))
+            elif op == "draws":
+                _, jid, k, msg = m
+                j = jobs[jid]
+                r = j["resolver"]
+                sc = scratch.pop((jid, k))
+                lo, hi = sc["lo"], sc["hi"]
+                r._store_flat = sc["store_flat"]
+                r._hits_by_key = sc["hits_by_key"]
+                r._n_addrs = sc["n_addrs"]
+                r._flat_p = sc["flat_p"]
+                r._burst_words = sc["burst_words"]
+                for mn, cum in msg.items():
+                    r.import_resume(mn, {}, {"draws": cum["base"]})
+                r.finish(lo, hi, fold=False)
+                cums: dict[str, dict] = {}
+                inline: dict[str, dict | None] = {}
+                for mn in j["mems"]:
+                    geo = r.cache_keys[mn]
+                    cum = {"draws": r.draws[mn]}
+                    if geo is not None:
+                        cum["hits"] = msg[mn]["hits_after"]
+                        cum["misses"] = msg[mn]["misses_after"]
+                        cum["max_tag"] = sc["end"][geo][1]
+                    cums[mn] = cum
+                    hb = vb = None
+                    if r.last_hits.get(mn) is not None:
+                        hb = _rc.pack_flags(r.last_hits[mn])
+                        vb = _rc.pack_flags(r.last_visits[mn])
+                    w = j["writers"].get(mn)
+                    if w is not None and k < w.max_chunks:
+                        states = {}
+                        if geo is not None:
+                            states["cache"] = sc["end"][geo][0]
+                        w.add(k, hi - lo,
+                              np.ascontiguousarray(r.last_ops[mn]),
+                              hb, vb, states, cum)
+                        inline[mn] = None  # clients read the record
+                    else:
+                        # no writer / past the artifact cap: the matrix
+                        # (and the planes, for mid-chunk cache stats)
+                        # rides back inline through the daemon
+                        inline[mn] = {
+                            "ops": _rc.shrink_ops(r.last_ops[mn]),
+                            "hits": hb, "visits": vb}
+                result_q.put(("done", wid, jid, k, cums, inline,
+                              time.perf_counter() - t0))
+        except Exception:  # noqa: BLE001 — the daemon fails the job,
+            result_q.put(  # the worker keeps serving its other jobs
+                ("error", wid, jid, k, traceback.format_exc()))

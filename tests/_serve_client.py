@@ -1,0 +1,39 @@
+"""Spawn-side client for the resolution-daemon tests (top-level module
+so a spawn context can import it)."""
+
+import numpy as np
+
+
+def pipeline(n=5000, seed=5):
+    from repro.core.simulator import MemAccess, SimStage
+    rng = np.random.default_rng(seed)
+    return [
+        SimStage("addr", ii=1, latency=2,
+                 accesses=[MemAccess("i", np.arange(n) * 4)]),
+        SimStage("fetch", ii=1, latency=3,
+                 accesses=[MemAccess("x", rng.integers(0, 1 << 19, n) * 4),
+                           MemAccess("y", np.arange(n) * 4 + (1 << 22),
+                                     is_store=True)]),
+        SimStage("fma", ii=4, latency=6),
+    ]
+
+
+def race_client(i, store, sock, barrier, q, n):
+    """One racing tenant: build the request, rendezvous at the barrier
+    (so both clients submit while the other's resolution is in flight),
+    resolve through the daemon, report results + the local cold count."""
+    from repro.core import rescache as rc
+    from repro.core.simulator import acp_cache
+    from repro.serve.client import simulate_dataflow_served
+    rc.configure(enabled=True, directory=store)
+    stages = pipeline(n)
+    mems = {"ACPC": acp_cache()}
+    barrier.wait()
+    try:
+        out = simulate_dataflow_served(stages, mems, n,
+                                       fifo_depths=(8,), address=sock)
+        q.put((i, {k: (v.cycles, v.cache_hits, v.cache_misses)
+                   for k, v in out.items()},
+               rc.stats()["cold_chunks"]))
+    except Exception as e:  # noqa: BLE001 — surfaced by the test
+        q.put((i, f"ERROR: {type(e).__name__}: {e}", -1))

@@ -1,0 +1,514 @@
+"""Tests for the resolution daemon (repro.serve): bit-identity with the
+library engines, three-way dedup, fairness/backpressure, failure
+semantics (worker death, client disconnect), and the serve plumbing in
+``simulate_dataflow_many`` / ``sweep_schedule``."""
+
+import contextlib
+import multiprocessing
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core import rescache as rc
+from repro.core.simulator import (acp, acp_cache, hp_cache,
+                                  simulate_dataflow_many)
+
+import _serve_client
+from _serve_client import pipeline
+
+
+@pytest.fixture()
+def store(tmp_path, monkeypatch):
+    """Isolated store + a tiny canonical chunk grid (512), propagated
+    to spawn children (daemon workers get it via the constructor, test
+    client subprocesses via the environment)."""
+    d = str(tmp_path / "store")
+    rc.clear()
+    rc.configure(enabled=True, directory=d)
+    monkeypatch.setattr(rc, "CHUNK_ITERS", 512)
+    monkeypatch.setenv("REPRO_CHUNK_ITERS", "512")
+    yield d
+    rc.clear()
+    rc.configure(enabled=False)
+
+
+@contextlib.contextmanager
+def daemon(**kw):
+    """A started in-process daemon on a short-path private socket
+    (AF_UNIX paths cap at ~107 bytes; pytest tmp_paths can exceed it)."""
+    from repro.serve.daemon import ResolutionDaemon
+    sdir = tempfile.mkdtemp(prefix="serve-")
+    kw.setdefault("workers", 2)
+    d = ResolutionDaemon(address=os.path.join(sdir, "d.sock"), **kw)
+    d.start()
+    try:
+        yield d
+    finally:
+        d.stop()
+
+
+def _key(v):
+    return (v.cycles, v.cache_hits, v.cache_misses,
+            v.stage_stall_cycles)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity with library mode
+# ---------------------------------------------------------------------------
+
+def test_served_equals_library(store):
+    """Cold daemon resolution == library streaming engine, down to
+    cycles, stall buckets, and cache stats, across cached / uncached /
+    write-around models and a FIFO-depth grid."""
+    from repro.serve.client import simulate_dataflow_served
+    n = 5000
+    mems = {"ACP": acp(), "ACPC": acp_cache(), "HPC": hp_cache()}
+    ref = simulate_dataflow_many(pipeline(n), dict(mems), n,
+                                 fifo_depths=(4, 16),
+                                 use_rescache=False)
+    with daemon() as d:
+        got = simulate_dataflow_served(pipeline(n), dict(mems), n,
+                                       fifo_depths=(4, 16),
+                                       address=d.address)
+        st = d.stats()
+    assert set(got) == set(ref)
+    for k in ref:
+        assert _key(got[k]) == _key(ref[k]), k
+    assert st["dedup"]["cold_chunks"] == 10  # ceil(5000/512)
+    assert st["jobs_completed"] == 1
+    assert st["requests"] and st["requests"][0]["chunks"] == 10
+
+
+def test_mid_chunk_tail_and_prefix_extension(store):
+    """n_iters off the canonical grid (mid-chunk cache stats from the
+    tail planes), then a longer run extending the same artifact: the
+    extension resumes from the stored records, never re-resolving the
+    prefix."""
+    from repro.serve.client import simulate_dataflow_served
+    mems = {"ACPC": acp_cache()}
+    short, full = 1400, 5000  # 1400 ends mid-chunk (C=512)
+    ref_s = simulate_dataflow_many(pipeline(full), {"ACPC": acp_cache()},
+                                   short, fifo_depths=(8,),
+                                   use_rescache=False)
+    ref_f = simulate_dataflow_many(pipeline(full), {"ACPC": acp_cache()},
+                                   full, fifo_depths=(8,),
+                                   use_rescache=False)
+    with daemon() as d:
+        got_s = simulate_dataflow_served(
+            pipeline(full), dict(mems), short, fifo_depths=(8,),
+            address=d.address)
+        st0 = d.stats()
+        got_f = simulate_dataflow_served(
+            pipeline(full), dict(mems), full, fifo_depths=(8,),
+            address=d.address)
+        st1 = d.stats()
+    for k in ref_s:
+        assert _key(got_s[k]) == _key(ref_s[k]), k
+    for k in ref_f:
+        assert _key(got_f[k]) == _key(ref_f[k]), k
+    # the short run resolved 3 chunks; the extension only the residue
+    assert st0["dedup"]["cold_chunks"] == 3
+    assert st1["dedup"]["cold_chunks"] == 10
+    assert st1["dedup"]["store_chunks"] \
+        + st1["dedup"]["inflight_chunks"] == 3
+
+
+def test_server_kwarg_falls_back_without_daemon(store):
+    """simulate_dataflow_many(server=...) with no daemon answers from
+    the local engines (ServeUnavailable is not a user-facing error)."""
+    n = 2000
+    ref = simulate_dataflow_many(pipeline(n), {"ACP": acp()}, n,
+                                 fifo_depths=(8,), use_rescache=False)
+    got = simulate_dataflow_many(pipeline(n), {"ACP": acp()}, n,
+                                 fifo_depths=(8,),
+                                 server=os.path.join(
+                                     tempfile.mkdtemp(), "absent.sock"))
+    for k in ref:
+        assert got[k].cycles == ref[k].cycles
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant dedup (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+def test_racing_clients_resolve_exactly_once(store):
+    """Two concurrent client *processes* race the same request through
+    one daemon: results bit-identical to each other and to library
+    mode, the shared keyset resolved exactly once (every chunk one
+    client paid cold, the other got from the store prefix or by
+    attaching in flight), and neither client resolved anything locally."""
+    n = 5000
+    ref = simulate_dataflow_many(pipeline(n), {"ACPC": acp_cache()}, n,
+                                 fifo_depths=(8,), use_rescache=False)
+    refd = {k: (v.cycles, v.cache_hits, v.cache_misses)
+            for k, v in ref.items()}
+    ctx = multiprocessing.get_context("spawn")
+    with daemon(throttle_s=0.1) as d:
+        barrier = ctx.Barrier(2)
+        q = ctx.Queue()
+        procs = [ctx.Process(target=_serve_client.race_client,
+                             args=(i, store, d.address, barrier, q, n))
+                 for i in range(2)]
+        for p in procs:
+            p.start()
+        outs = {}
+        try:
+            for _ in range(2):
+                i, o, local_cold = q.get(timeout=180)
+                outs[i] = o
+                assert local_cold == 0, o
+        finally:
+            for p in procs:
+                p.join(timeout=30)
+                if p.is_alive():
+                    p.terminate()
+        st = d.stats()
+    assert outs[0] == refd, outs[0]
+    assert outs[1] == refd, outs[1]
+    ded = st["dedup"]
+    assert ded["inflight_chunks"] > 0  # the race actually overlapped
+    # exactly-once: every served chunk was resolved cold exactly once
+    assert ded["cold_chunks"] == \
+        ded["store_chunks"] + ded["inflight_chunks"] == 10
+    assert st["jobs_completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Failure semantics
+# ---------------------------------------------------------------------------
+
+def _raw_resolve(address, stages, mems, n, *, seed=0, req="t.0"):
+    """Open a raw client connection and submit one resolve (the
+    protocol-level moves of simulate_dataflow_served, without the fold
+    loop — so tests can disconnect at a controlled point)."""
+    import cloudpickle
+
+    from repro.serve import protocol
+    keys = {mn: rc.resolution_key("dataflow", stages, m, seed)
+            for mn, m in mems.items()}
+    payload = cloudpickle.dumps({
+        "stages": stages, "mems": mems, "seed": seed, "n_iters": n,
+        "keys": keys})
+    conn = protocol.connect(address, timeout=10.0)
+    conn.settimeout(120.0)
+    protocol.send_msg(conn, {
+        "type": "resolve", "req": req, "keys": keys, "mems": mems,
+        "seed": seed, "n_iters": n, "chunk_iters": rc.CHUNK_ITERS,
+        "store_dir": rc._dir(), "payload": payload, "weight": 1.0})
+    return conn, protocol.recv_msg(conn)
+
+
+def test_disconnect_keeps_shared_chunks_running(store):
+    """Client A disconnects mid-request: the daemon survives, chunks
+    client B still needs keep running, and B's results stay exact."""
+    from repro.serve.client import ping, simulate_dataflow_served
+    n = 5000
+    ref = simulate_dataflow_many(pipeline(n), {"ACPC": acp_cache()}, n,
+                                 fifo_depths=(8,), use_rescache=False)
+    out, err = {}, []
+
+    def client_b(address):
+        try:
+            out.update(simulate_dataflow_served(
+                pipeline(n), {"ACPC": acp_cache()}, n,
+                fifo_depths=(8,), address=address))
+        except Exception as e:  # noqa: BLE001
+            err.append(e)
+
+    with daemon(throttle_s=0.1) as d:
+        t = threading.Thread(target=client_b, args=(d.address,))
+        t.start()
+        # A attaches to B's in-flight job, then drops without reading
+        conn, resp = _raw_resolve(d.address, pipeline(n),
+                                  {"ACPC": acp_cache()}, n, req="a.0")
+        assert resp["type"] == "accepted"
+        conn.close()
+        t.join(timeout=180)
+        assert not t.is_alive()
+        assert ping(d.address)  # the daemon did not die with A
+        st = d.stats()
+    assert not err, err
+    for k in ref:
+        assert _key(out[k]) == _key(ref[k]), k
+    # B still needed every chunk: nothing was cancelled
+    assert st["failures"]["cancelled_chunks"] == 0
+
+
+def test_orphaned_request_cancels_undispatched_chunks(store):
+    """A request nobody shares cancels its never-dispatched chunks on
+    disconnect — and the partial prefix it did resolve stays in the
+    store, so a later identical request resumes past it."""
+    from repro.serve.client import simulate_dataflow_served
+    n = 5000
+    with daemon(throttle_s=0.25, workers=2) as d:
+        conn, resp = _raw_resolve(d.address, pipeline(n),
+                                  {"ACPC": acp_cache()}, n, req="o.0")
+        assert resp["type"] == "accepted"
+        time.sleep(0.6)  # a couple of dispatches at most (throttled)
+        conn.close()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            st = d.stats()
+            if st["failures"]["cancelled_chunks"] > 0 \
+                    and not st["jobs_active"]:
+                break
+            time.sleep(0.1)
+        assert st["failures"]["cancelled_chunks"] > 0
+        # revival: the same request later completes through the daemon
+        got = simulate_dataflow_served(pipeline(n),
+                                       {"ACPC": acp_cache()}, n,
+                                       fifo_depths=(8,),
+                                       address=d.address)
+    ref = simulate_dataflow_many(pipeline(n), {"ACPC": acp_cache()}, n,
+                                 fifo_depths=(8,), use_rescache=False)
+    for k in ref:
+        assert _key(got[k]) == _key(ref[k]), k
+
+
+def test_worker_death_recovery_and_stats(store):
+    """Killing a pool worker mid-run: the daemon respawns it, replays
+    the lost chunks' phase messages, the run completes bit-identically,
+    and the churn is visible in stats (worker_restarts / chunk_retries
+    / census worker_retries)."""
+    from repro.serve.client import simulate_dataflow_served
+    n = 5000
+    ref = simulate_dataflow_many(pipeline(n), {"ACPC": acp_cache()}, n,
+                                 fifo_depths=(8,), use_rescache=False)
+    out, err = {}, []
+
+    def client(address):
+        try:
+            out.update(simulate_dataflow_served(
+                pipeline(n), {"ACPC": acp_cache()}, n,
+                fifo_depths=(8,), address=address))
+        except Exception as e:  # noqa: BLE001
+            err.append(e)
+
+    with daemon(throttle_s=0.2, workers=2) as d:
+        t = threading.Thread(target=client, args=(d.address,))
+        t.start()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if any(w == 0 for w in d._inflight.values()):
+                d._procs[0].kill()  # worker 0 dies holding chunks
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("worker 0 never held an in-flight chunk")
+        t.join(timeout=180)
+        assert not t.is_alive()
+        st = d.stats()
+    assert not err, err
+    for k in ref:
+        assert _key(out[k]) == _key(ref[k]), k
+    assert st["failures"]["worker_restarts"] >= 1
+    assert st["failures"]["chunk_retries"] >= 1
+    assert st["census"]["worker_retries"] >= 1
+
+
+def test_retry_budget_exhaustion_fails_loudly(store):
+    """retry_budget=0: the first worker death fails the job and every
+    attached request — no infinite respawn loops."""
+    from repro.serve.client import (ServeUnavailable,
+                                    simulate_dataflow_served)
+    n = 5000
+    err = []
+
+    def client(address):
+        try:
+            simulate_dataflow_served(pipeline(n), {"ACPC": acp_cache()},
+                                     n, fifo_depths=(8,),
+                                     address=address)
+        except ServeUnavailable as e:
+            err.append(e)
+
+    with daemon(throttle_s=0.2, workers=2, retry_budget=0) as d:
+        t = threading.Thread(target=client, args=(d.address,))
+        t.start()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if any(w == 0 for w in d._inflight.values()):
+                d._procs[0].kill()
+                break
+            time.sleep(0.02)
+        t.join(timeout=180)
+        assert not t.is_alive()
+        st = d.stats()
+    assert err and "retry budget" in str(err[0])
+    assert st["failures"]["jobs_failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+def test_backpressure_rejects_with_retry_after(store):
+    """A cold request past the global queue cap gets ``busy`` +
+    retry-after, not an unbounded queue entry."""
+    n = 5000  # 10 chunks > max_queued_chunks
+    with daemon(max_queued_chunks=2) as d:
+        conn, resp = _raw_resolve(d.address, pipeline(n),
+                                  {"ACPC": acp_cache()}, n)
+        conn.close()
+        st = d.stats()
+    assert resp["type"] == "busy"
+    assert resp["retry_after_s"] > 0
+    assert st["admission"]["rejected"] == 1 and \
+        st["admission"]["accepted"] == 0
+
+
+def test_per_client_budget(store):
+    """The per-client outstanding-chunks budget rejects a second
+    oversized request from the same connection."""
+    from repro.serve import protocol
+    n = 5000
+    with daemon(max_client_chunks=15, throttle_s=0.2) as d:
+        conn, resp = _raw_resolve(d.address, pipeline(n),
+                                  {"ACPC": acp_cache()}, n, req="b.0")
+        assert resp["type"] == "accepted"
+        # second request on the same conn: 10 outstanding + 10 > 15
+        import cloudpickle
+        stages2 = pipeline(n, seed=7)
+        mems = {"ACPC": acp_cache()}
+        keys = {mn: rc.resolution_key("dataflow", stages2, m, 0)
+                for mn, m in mems.items()}
+        protocol.send_msg(conn, {
+            "type": "resolve", "req": "b.1", "keys": keys,
+            "mems": mems, "seed": 0, "n_iters": n,
+            "chunk_iters": rc.CHUNK_ITERS, "store_dir": rc._dir(),
+            "payload": cloudpickle.dumps({
+                "stages": stages2, "mems": mems, "seed": 0,
+                "n_iters": n, "keys": keys}),
+            "weight": 1.0})
+        while True:
+            m = protocol.recv_msg(conn)
+            if m.get("req") == "b.1":
+                break
+        conn.close()
+    assert m["type"] == "busy"
+
+
+def test_store_mismatch_rejected(store):
+    """A client on a different store directory is refused (serving a
+    foreign store would interleave incompatible artifacts)."""
+    from repro.serve import protocol
+    import cloudpickle
+    stages = pipeline(1000)
+    mems = {"ACP": acp()}
+    keys = {"ACP": rc.resolution_key("dataflow", stages, mems["ACP"], 0)}
+    with daemon() as d:
+        conn = protocol.connect(d.address, timeout=10.0)
+        protocol.send_msg(conn, {
+            "type": "resolve", "req": "x", "keys": keys, "mems": mems,
+            "seed": 0, "n_iters": 1000, "chunk_iters": rc.CHUNK_ITERS,
+            "store_dir": tempfile.mkdtemp(),
+            "payload": cloudpickle.dumps({}), "weight": 1.0})
+        resp = protocol.recv_msg(conn)
+        conn.close()
+    assert resp["type"] == "error"
+    assert "store" in resp["reason"]
+
+
+# ---------------------------------------------------------------------------
+# Driver / benchmark plumbing
+# ---------------------------------------------------------------------------
+
+def test_sweep_rows_record_resolution_mode(store):
+    """sweep_schedule rows carry the resolution mode (streaming /
+    sharded:N / served:ADDR) so BENCH trend comparisons can tell the
+    paths apart."""
+    from repro.dataflow.schedule import sweep_schedule
+
+    class _Sched:
+        channel_bytes = 4
+
+        def sim_stages(self, traces=None, **kw):
+            return pipeline(2000)
+
+    res = sweep_schedule(_Sched(), n_iters=2000, mems={"ACP": acp},
+                         fifo_depths=(8,))
+    assert all(r["resolution_mode"] == "streaming" for r in res.rows)
+    with daemon() as d:
+        res2 = sweep_schedule(_Sched(), n_iters=2000,
+                              mems={"ACP": acp}, fifo_depths=(8,),
+                              server=d.address)
+    assert all(r["resolution_mode"] == f"served:{d.address}"
+               for r in res2.rows)
+    for a, b in zip(res.rows, res2.rows):
+        assert a["dataflow_cycles"] == b["dataflow_cycles"]
+
+
+def test_default_workers_heuristic():
+    """<4 cores fall back to streaming unless explicitly overridden;
+    ≥4 cores split the leftover cores across concurrent jobs."""
+    from repro.core.chunkgraph import default_workers
+    assert default_workers(cpus=1) == 1
+    assert default_workers(cpus=2) == 1
+    assert default_workers(cpus=3) == 1
+    assert default_workers(cpus=4) == 4
+    assert default_workers(cpus=8, jobs=2) == 4
+    assert default_workers(cpus=8, jobs=8) == 2   # floor of 2
+    assert default_workers(cpus=2, explicit=6) == 6
+    assert default_workers(cpus=16, full=False) == 1
+
+
+def test_gc_cli(store):
+    """``run.py gc --max-bytes`` drives rescache.gc() on the
+    configured store."""
+    d = rc._dir()
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "orphan.tmp"), "wb") as f:
+        f.write(b"x" * 128)
+    env = dict(os.environ, REPRO_RESCACHE_DIR=d,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "gc",
+         "--max-bytes", "0"],
+        capture_output=True, text=True, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), env=env)
+    assert out.returncode == 0, out.stderr
+    assert "orphans_removed" in out.stdout
+    assert not os.path.exists(os.path.join(d, "orphan.tmp"))
+
+
+def test_daemon_cli_stats_and_shutdown(store):
+    """The launch CLI: foreground daemon in a subprocess, stats as
+    JSON, shutdown tears it down."""
+    import json
+    sdir = tempfile.mkdtemp(prefix="serve-")
+    sock = os.path.join(sdir, "cli.sock")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "daemon",
+         "--socket", sock, "--workers", "1", "--store-dir", rc._dir()],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        from repro.serve.client import ping
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline and not ping(sock):
+            time.sleep(0.2)
+        assert ping(sock)
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "stats",
+             "--socket", sock], env=env, capture_output=True, text=True)
+        assert out.returncode == 0, out.stderr
+        stats = json.loads(out.stdout)
+        assert stats["chunk_iters"] == 512
+        assert stats["workers"] == 1
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "shutdown",
+             "--socket", sock], env=env, capture_output=True, text=True)
+        assert out.returncode == 0, out.stderr
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
