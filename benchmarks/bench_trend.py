@@ -33,10 +33,12 @@ WALL_FLOOR_S = 30.0  # don't gate walls this short: runner noise 2x's them
 
 
 def _sweep_key(row: dict) -> tuple:
+    # "transform" defaults to "none" so rows written by pre-catalog
+    # artifacts keep matching the untransformed lanes of new runs
     return (row.get("kernel"), row.get("mem"), row.get("fifo_depth"),
             row.get("mem_in_scc"), row.get("words_per_cycle"),
             row.get("max_outstanding"), row.get("n_iters"),
-            row.get("trace_set"))
+            row.get("trace_set"), row.get("transform") or "none")
 
 
 def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
@@ -116,8 +118,26 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                 failures.append(
                     f"dse {kn}: previously dominated Algorithm 1, "
                     f"no longer does")
+            if pr.get("transformed_dominates") and \
+                    not cr.get("transformed_dominates"):
+                failures.append(
+                    f"dse {kn}: the transformed-widened front "
+                    f"previously dominated the untransformed "
+                    f"(stage-regrouping-only) front, no longer does")
     elif pd and cd:
         notes.append("dse: smoke/full mismatch, skipped")
+    # hard gate (current run alone, no previous needed): once a DSE
+    # entry explores the transformation catalog, a transformed candidate
+    # must strictly dominate the best untransformed point — losing that
+    # means the catalog stopped widening the front
+    if cd:
+        for kn, cr in cd.get("kernels", {}).items():
+            if cr.get("transforms") and \
+                    cr.get("transformed_dominates") is False:
+                failures.append(
+                    f"dse {kn}: transform axis explored "
+                    f"({'/'.join(cr['transforms'])}) but no transformed "
+                    f"candidate dominates the untransformed front")
 
     # --- chunk-graph worker scaling ----------------------------------------
     pw, cw = prev.get("worker_scaling"), cur.get("worker_scaling")

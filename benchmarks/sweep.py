@@ -123,13 +123,14 @@ def _sweep_task(task: tuple) -> list[dict]:
     ``n_iters_simulated`` so trend comparisons never silently mix
     scales."""
     (kname, mem_name, fifo_depths, scc_modes, n_iters,
-     wpcs, mos, workers, server) = task
+     wpcs, mos, workers, server, transform) = task
     k = _make_kernel(kname)
     n = n_iters or k.n_iters_full
     traces = k.full_traces
     compiled = dataflow_compile(
         k.loop_body, k.carry_example, *k.body_args, loop=True,
-        nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
+        nonaliasing_carries=getattr(k, "nonaliasing_carries", ()),
+        transforms=transform)
     mems = {mem_name: standard_memory_models()[mem_name]}
     res = compiled.sweep(n_iters=n, mems=mems,
                          fifo_depths=fifo_depths, scc_modes=scc_modes,
@@ -196,6 +197,13 @@ def run_dse(*, smoke: bool = False,
     candidates, so the whole exploration costs little more than one cold
     simulation) and record the cycles-vs-FIFO-bits Pareto front, the
     baseline, and whether some candidate strictly dominates Algorithm 1.
+    The exploration is *widened* with the transformation catalog
+    (unroll=2 ± coalescing as per-candidate lanes, joint with a halved
+    FIFO depth so transformed points can win at equal bits) and spans
+    two memory models (``ACP`` / ``ACP+64KB``) in one call; the entry
+    records ``transformed_dominates`` — whether some transformed
+    candidate strictly dominates the best untransformed point — which
+    bench_trend hard-gates.
     ``--smoke`` explores the first two kernels at SMOKE_ITERS for CI;
     the full mode explores at the Table-I iteration counts (defaults to
     spmv — Floyd–Warshall's 10⁹-iteration traces exceed the artifact
@@ -254,10 +262,18 @@ def run_dse(*, smoke: bool = False,
             _rc.evict(_rc.resolution_key("dataflow", base_stages, mem,
                                          probe_seed))
         cold_s = sorted(colds)[1]
+        from repro.dataflow import TransformConfig
+        mem64 = standard_memory_models()["ACP+64KB"]()
+        mem64.max_outstanding = MAX_OUTSTANDING
         te = time.perf_counter()
         res = compiled.explore(
             n_iters=n, traces=list(traces.values()), mem=mem,
-            fifo_depth=fifo_depth, max_candidates=max_candidates,
+            mems=[mem, mem64],
+            fifo_depth=fifo_depth,
+            fifo_depths=[fifo_depth, max(1, fifo_depth // 2)],
+            transforms=[TransformConfig(unroll=2),
+                        TransformConfig(unroll=2, coalesce=True)],
+            max_candidates=max_candidates,
             server=server)
         explore_s = time.perf_counter() - te  # incl. front Compiled
         entry = res.to_json()                 # artifact materialization
@@ -309,8 +325,18 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
         mems = tuple(standard_memory_models())
         fifo_depths, scc_modes, n_iters = FIFO_DEPTHS, SCC_MODES, None
     tasks = [(kn, mn, fifo_depths, scc_modes, n_iters,
-              words_per_cycle, max_outstandings, workers, server)
+              words_per_cycle, max_outstandings, workers, server, None)
              for kn in kernels for mn in mems]
+    # the transformation-catalog axis: spmv re-swept under
+    # unroll=2 (+coalescing) — the rows land with a distinct
+    # ``transform`` signature so bench_trend keys them separately
+    if "spmv" in kernels:
+        from repro.dataflow import TransformConfig
+        tf_mems = mems if smoke else ("ACP",)
+        tasks += [("spmv", mn, fifo_depths, scc_modes, n_iters,
+                   words_per_cycle, max_outstandings, workers, server,
+                   TransformConfig(unroll=2, coalesce=True))
+                  for mn in tf_mems]
     if jobs is None:
         jobs = 1 if smoke else min(2, multiprocessing.cpu_count())
     rows: list[dict] = []
@@ -329,9 +355,10 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
         if pool is not None:
             pool.close()
             pool.join()
-    rows.sort(key=lambda r: (r["kernel"], r["mem"], r["fifo_depth"],
-                             r["mem_in_scc"], r["words_per_cycle"],
-                             r["max_outstanding"]))
+    rows.sort(key=lambda r: (r["kernel"], r["mem"],
+                             r.get("transform") or "none",
+                             r["fifo_depth"], r["mem_in_scc"],
+                             r["words_per_cycle"], r["max_outstanding"]))
     # per-kernel cycles-vs-FIFO-bits Pareto fronts (HIDA-style DSE view,
     # the same dominance rule as Compiled.sweep via SweepResult.pareto)
     from repro.dataflow.schedule import SweepResult
@@ -344,6 +371,7 @@ def run_sweep(*, smoke: bool = False, jobs: int | None = None,
              "fifo_bits": r["fifo_bits"],
              "words_per_cycle": r["words_per_cycle"],
              "max_outstanding": r["max_outstanding"],
+             "transform": r.get("transform") or "none",
              "dataflow_cycles": r["dataflow_cycles"]}
             for r in front]
     perf = measure_perf()

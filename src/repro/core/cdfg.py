@@ -178,6 +178,9 @@ class CDFG:
         self.outvars = list(outvars)
         self.region_of_invar = dict(region_of_invar)
         self._by_id = {n.id: n for n in nodes}
+        #: active TransformConfig, set by the driver's ``transform`` pass
+        #: (None = untransformed); read by ``partition.materialize``
+        self.transforms = None
 
     # -- construction -------------------------------------------------------
 

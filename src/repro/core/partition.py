@@ -63,6 +63,10 @@ class Stage:
     ii: int
     #: memory regions this stage touches (paper: one access interface each)
     regions: tuple[str, ...]
+    #: raw dependence-cycle latency (``ii`` before transform scaling:
+    #: unroll serializes U recurrence steps per token, so ``ii`` may be
+    #: ``U·scc_ii`` — the rewrites need the unscaled value to recompute)
+    scc_ii: int = 0
 
     def __repr__(self) -> str:  # pragma: no cover
         tags = []
@@ -93,6 +97,9 @@ class Partition:
     stage_of_node: dict[int, int]
     #: nodes replicated into later stages instead of channeled (§III-B1)
     duplicated: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    #: active :class:`repro.dataflow.transforms.TransformConfig` (None =
+    #: untransformed); channel widths and stage timing already reflect it
+    transforms: Any = None
 
     @property
     def num_stages(self) -> int:
@@ -133,6 +140,24 @@ def _scc_cycle_latency(cdfg: CDFG, scc: set[int]) -> int:
         has_self = any(e.src == nid and e.dst == nid for e in cdfg.edges)
         return cdfg.node(nid).latency if has_self else 0
     return sum(cdfg.node(n).latency for n in scc)
+
+
+def _scaled_stage_timing(scc_ii: int, base_latency: int,
+                         transforms: Any) -> tuple[int, int]:
+    """(ii, latency) of a stage under the active transform config's
+    unroll factor: a cyclic SCC serializes its U recurrence steps per
+    channel token (``ii = U·scc_ii``, ``latency += (U−1)·scc_ii``);
+    acyclic stages replicate U-way spatially and keep their timing.
+    The single definition :func:`materialize` and
+    :func:`duplicate_cheap_rewrite` share so the scaling cannot drift
+    (re-exported as ``repro.dataflow.transforms.scaled_stage_timing``)."""
+    U = int(getattr(transforms, "unroll", 1) or 1)
+    ii = max(1, scc_ii)
+    latency = base_latency
+    if U > 1 and scc_ii > 0:
+        ii = max(1, scc_ii * U)
+        latency += (U - 1) * scc_ii
+    return ii, latency
 
 
 @dataclasses.dataclass
@@ -223,16 +248,25 @@ def merge_costly_boundaries(
     return dataclasses.replace(plan, groups=groups)
 
 
-def materialize(cdfg: CDFG, plan: StagePlan) -> Partition:
+def materialize(cdfg: CDFG, plan: StagePlan,
+                transforms: Any = None) -> Partition:
     """Turn a :class:`StagePlan` into a :class:`Partition` with concrete
-    :class:`Stage` records and FIFO channels (no duplication rewrite)."""
+    :class:`Stage` records and FIFO channels (no duplication rewrite).
+    ``transforms`` (default: the CDFG's annotation from the ``transform``
+    pass) scales stage timing and channel widths — see
+    :func:`repro.dataflow.transforms.scaled_stage_timing`."""
+    if transforms is None:
+        transforms = getattr(cdfg, "transforms", None)
     stages: list[Stage] = []
     stage_of_node: dict[int, int] = {}
     for sid, grp in enumerate(plan.groups):
         node_ids = sorted(n for k in grp for n in plan.sccs[k])
         for nid in node_ids:
             stage_of_node[nid] = sid
-        ii = max([1] + [_scc_cycle_latency(cdfg, plan.sccs[k]) for k in grp])
+        scc_ii = max([0] + [_scc_cycle_latency(cdfg, plan.sccs[k])
+                            for k in grp])
+        ii, latency = _scaled_stage_timing(
+            scc_ii, sum(cdfg.node(n).latency for n in node_ids), transforms)
         regions = tuple(sorted({cdfg.node(n).region for n in node_ids
                                 if cdfg.node(n).region}))
         stages.append(Stage(
@@ -240,11 +274,12 @@ def materialize(cdfg: CDFG, plan: StagePlan) -> Partition:
             node_ids=node_ids,
             has_memory=any(cdfg.node(n).is_memory for n in node_ids),
             has_long=any(cdfg.node(n).is_long for n in node_ids),
-            latency=sum(cdfg.node(n).latency for n in node_ids),
+            latency=latency,
             ii=ii,
             regions=regions,
+            scc_ii=scc_ii,
         ))
-    part = Partition(cdfg, stages, [], stage_of_node)
+    part = Partition(cdfg, stages, [], stage_of_node, transforms=transforms)
     part.channels = derive_channels(part)
     return part
 
@@ -265,8 +300,10 @@ def duplicate_cheap_rewrite(part: Partition) -> Partition:
         for sid in consumers:
             extra[sid] = extra.get(sid, 0) + cdfg.node(nid).latency
     for s in part.stages:
-        s.latency = sum(cdfg.node(n).latency for n in s.node_ids) \
+        base = sum(cdfg.node(n).latency for n in s.node_ids) \
             + extra.get(s.id, 0)
+        s.ii, s.latency = _scaled_stage_timing(
+            s.scc_ii, base, part.transforms)
     part.channels = derive_channels(part)
     return part
 
@@ -462,7 +499,11 @@ def maximal_plan(plan: StagePlan) -> StagePlan:
 def derive_channels(part: Partition) -> list[Channel]:
     """Every dependence edge crossing a stage boundary becomes a FIFO channel
     (§III-A last ¶): one channel per (var, src, dst) triple; memory-order
-    edges become zero-width token channels."""
+    edges become zero-width token channels.  Under an unroll transform a
+    token carries U iterations' worth of payload, so data channels widen
+    ×U (the FIFO bit accounting the DSE prunes against scales with them;
+    token channels stay zero-width)."""
+    unroll = int(getattr(part.transforms, "unroll", 1) or 1)
     seen: set[tuple[int, int, Any]] = set()
     channels: list[Channel] = []
     for e in part.cdfg.edges:
@@ -481,7 +522,7 @@ def derive_channels(part: Partition) -> list[Channel]:
             src_stage=s_src,
             dst_stage=s_dst,
             var=e.var,
-            nbytes=_var_nbytes(e.var) if e.var is not None else 0,
+            nbytes=_var_nbytes(e.var) * unroll if e.var is not None else 0,
             kind=e.kind,
         ))
     return channels

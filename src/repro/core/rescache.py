@@ -330,6 +330,17 @@ def resolution_key(kind: str, stages: Sequence[SimStage],
       access resolves), so neither flag keys.  ``posted_writes`` no
       longer keys either: the v3 artifact stores raw per-access
       latencies, and posted stores are excluded at fold time.
+
+    ``MemAccess.width`` (burst width of a coalesced vector access — see
+    ``repro.dataflow.transforms``) is **fold-only** under the v3
+    contract: latency draws are per-*request* and identical addresses
+    draw identical latencies, so a width-``w`` access resolves exactly
+    like its width-1 head; only the burst-bandwidth fold reads ``w``.
+    A *transformed* op stream, on the other hand, keys differently by
+    construction — its closure cells (unroll factor, lane, base
+    fingerprint) and sampled windows change the trace fingerprint — so
+    transformed candidates are new cache entries, never invalidations
+    of untransformed ones.
     """
     cache = _cache_signature(mem)
     if kind == "conventional":

@@ -17,12 +17,16 @@ Internals (all public, all swappable):
 
 * :mod:`~repro.dataflow.options`  — :class:`CompileOptions` (hashable).
 * :mod:`~repro.dataflow.passes`   — the ordered pass pipeline
-  (trace → memdep → partition → rewrite → decouple → schedule); each pass
+  (trace → memdep → transform → partition → rewrite → dse →
+  decouple → schedule); each pass
   delegates to the paper-faithful implementation in ``repro.core``.
 * :mod:`~repro.dataflow.backends` — the execution-backend registry
   (``sequential`` / ``emulated`` / ``systolic`` / ``xla`` / ``simulate``).
 * :mod:`~repro.dataflow.schedule` — static schedule analysis and the
   Fig. 2/5 simulation report.
+* :mod:`~repro.dataflow.transforms` — the HLS transformation catalog
+  (tiling, unroll/vectorize, access coalescing, memory-port
+  re-association), applied pre-partition and explored by the DSE.
 """
 
 from .backends import (Backend, BackendUnavailableError, available_backends,
@@ -35,9 +39,11 @@ from .dse import (DseCandidate, DseResult, enumerate_plans, explore,
 from .options import CompileOptions, ResourceConstraints
 from .passes import (CompileContext, DecouplePass, DsePass, MemoryDepPass,
                      Pass, PartitionPass, PassPipeline, RewritePass,
-                     SchedulePass, TracePass, default_pipeline)
+                     SchedulePass, TracePass, TransformPass,
+                     default_pipeline)
 from .schedule import (Schedule, SimReport, StageSummary, SweepResult,
                        fused_stage, simulate_schedule, sweep_schedule)
+from .transforms import TransformConfig, TransformError
 
 __all__ = [
     "Backend", "BackendUnavailableError", "available_backends",
@@ -49,7 +55,8 @@ __all__ = [
     "explore_plans", "partition_resources",
     "CompileContext", "Pass", "PassPipeline", "TracePass", "MemoryDepPass",
     "PartitionPass", "RewritePass", "DsePass", "DecouplePass",
-    "SchedulePass", "default_pipeline",
+    "SchedulePass", "TransformPass", "default_pipeline",
     "Schedule", "SimReport", "StageSummary", "SweepResult", "fused_stage",
     "simulate_schedule", "sweep_schedule",
+    "TransformConfig", "TransformError",
 ]

@@ -148,6 +148,14 @@ class Compiled:
         """The ``dse`` pass's exploration (None unless ``options.dse``)."""
         return self.context.dse_result
 
+    @property
+    def transform_signature(self) -> str:
+        """Active transformation-catalog signature (``"none"`` when the
+        pipeline compiled untransformed) — surfaced in :meth:`report`
+        and on every sweep row."""
+        tf = getattr(self.schedule, "transforms", None)
+        return tf.signature() if tf is not None else "none"
+
     def sim_stages(self, traces: Any = None, **kwargs: Any):
         """Cycle-simulator stage specs (II/latency/mem-in-SCC from the real
         partitioner, traces attached in pipeline order)."""
@@ -165,6 +173,8 @@ class Compiled:
             f"  pipeline II={sch.pipeline_ii}  "
             f"total latency={sch.total_latency}  "
             f"bubble@8mb={sch.bubble_fraction(8):.2f}",
+            f"  passes: {' -> '.join(self.pipeline.names())}  "
+            f"transforms: {self.transform_signature}",
         ]
         for s in sch.stages:
             tags = [t for t, on in (("MEM", s.has_memory),

@@ -14,7 +14,10 @@ that explorer for the template:
    :func:`repro.core.partition.neighbor_plans`) from the Algorithm 1
    plan, with the ``fused`` / ``maximal`` degenerate plans always
    included; the §III-B1 cheap-op duplication rewrite is a per-candidate
-   toggle (the *duplicate* move).
+   toggle (the *duplicate* move), and the HLS transformation catalog
+   (:mod:`repro.dataflow.transforms` — unroll/vectorize, access
+   coalescing, memory-port re-association) adds per-candidate transform
+   lanes plus a re-associated plan seed.
 2. **Prune** — against :class:`~repro.dataflow.options.ResourceConstraints`:
    total FIFO bits, per-stage memory-port count, duplication budget,
    stage count.  Pruned candidates are never simulated.
@@ -56,20 +59,28 @@ from .schedule import _cyclic_nodes
 
 
 def enumerate_plans(cdfg: CDFG, base_plan: StagePlan,
-                    max_plans: int) -> list[tuple[tuple[str, ...],
-                                                  StagePlan]]:
+                    max_plans: int, *,
+                    reassoc: bool = False) -> list[tuple[tuple[str, ...],
+                                                         StagePlan]]:
     """Breadth-first closure of the merge/split move set from
     ``base_plan``, deduplicated by :func:`plan_signature` and capped at
     ``max_plans``.  The fused and maximal degenerate plans are seeded
-    explicitly so they are reachable at any budget.  Returns
+    explicitly so they are reachable at any budget; ``reassoc=True``
+    additionally seeds the memory-port re-association split
+    (:func:`repro.dataflow.transforms.split_by_region` — multi-region
+    stages split by region, the documented DSE gap).  Returns
     ``(moves, plan)`` pairs; the base plan is first with an empty move
     list."""
     from collections import deque
 
+    seeds = [("fused", fused_plan(base_plan)),
+             ("maximal", maximal_plan(base_plan))]
+    if reassoc:
+        from .transforms import split_by_region
+        seeds.insert(0, ("reassoc", split_by_region(cdfg, base_plan)))
     out: list[tuple[tuple[str, ...], StagePlan]] = [((), base_plan)]
     seen = {plan_signature(base_plan)}
-    for tag, p in (("fused", fused_plan(base_plan)),
-                   ("maximal", maximal_plan(base_plan))):
+    for tag, p in seeds:
         sig = plan_signature(p)
         if sig not in seen and plan_is_legal(cdfg, p):
             seen.add(sig)
@@ -224,6 +235,7 @@ def evaluate_candidates(
     fifo_depth: int | None = None,
     fifo_depths: Sequence[int] | None = None,
     depth_lists: Sequence[Sequence[int]] | None = None,
+    n_iters_list: Sequence[int] | None = None,
     seed: int = 0,
     use_rescache: bool | None = None,
     chunk_iters: int | None = None,
@@ -248,8 +260,14 @@ def evaluate_candidates(
 
     Depths per candidate come from ``depth_lists`` (one sequence per
     candidate), else the shared ``fifo_depths``, else the single
-    ``fifo_depth`` (default 8).  Returns ``(per-candidate {depth:
-    cycles} dicts, stats)``.
+    ``fifo_depth`` (default 8).  ``n_iters_list`` gives per-candidate
+    iteration counts (transformed candidates stream
+    ``tokens(n_iters) = ceil(n/U)`` channel tokens, so a mixed
+    transformed/untransformed batch runs shorter lanes alongside the
+    full-length ones; the shared chunk grid is clamped per candidate, so
+    every lane sees exactly the chunk boundaries a stand-alone run of
+    its own length would).  Returns ``(per-candidate {depth: cycles}
+    dicts, stats)``.
     """
     from ..core import rescache as _rc
     from ..core.simulator import (DEFAULT_CHUNK_ITERS, _LaneSolver,
@@ -261,42 +279,51 @@ def evaluate_candidates(
         shared = tuple(fifo_depths) if fifo_depths is not None \
             else (fifo_depth if fifo_depth is not None else 8,)
         depth_lists = [shared] * len(stage_lists)
-    if n_iters <= 0 or not stage_lists:
+    if n_iters_list is None:
+        n_iters_list = [n_iters] * len(stage_lists)
+    max_n = max(n_iters_list, default=n_iters)
+    if max_n <= 0 or not stage_lists:
         return [{d: 0 for d in ds} for ds in depth_lists], \
             {"resolution_groups": 0, "cold_groups": 0}
 
     def _run(rescache_override: bool | None) -> tuple[list[dict[int,
                                                                 int]],
                                                       dict]:
-        groups: dict[str, dict] = {}
-        gkeys: list[str] = []
-        for stages in stage_lists:
-            gkey = _rc.resolution_key("dataflow", stages, mem, seed)
-            gkeys.append(gkey)
-            if gkey not in groups:
-                groups[gkey] = {
+        # candidates sharing a resolution key always share an iteration
+        # count (same op streams ⇒ same transform ⇒ same token count),
+        # but key on both so a pathological mix stays correct
+        groups: dict[tuple, dict] = {}
+        gids: list[tuple] = []
+        for stages, g_n in zip(stage_lists, n_iters_list):
+            gid = (_rc.resolution_key("dataflow", stages, mem, seed), g_n)
+            gids.append(gid)
+            if gid not in groups:
+                groups[gid] = {
                     "stages": stages,
+                    "n": g_n,
                     "plan": _ResolutionPlan(
                         "dataflow", stages, {mem.name: mem}, seed,
-                        n_iters, rescache_override)}
+                        g_n, rescache_override)}
         folders = [_OpFolder(st) for st in stage_lists]
         solvers = [{d: _LaneSolver(st, d, collect_stalls=False)
                     for d in ds}
                    for st, ds in zip(stage_lists, depth_lists)]
         align = _rc.CHUNK_ITERS if _rc.enabled(rescache_override) \
             else None
-        for lo, hi in _chunk_bounds(n_iters, chunk_iters, align):
-            n = hi - lo
-            zero = np.zeros(n, dtype=np.int32)
+        zeros: dict[int, np.ndarray] = {}
+        for lo, hi in _chunk_bounds(max_n, chunk_iters, align):
             for g in groups.values():
+                if lo >= g["n"]:
+                    continue
+                hi_g = min(hi, g["n"])
                 plan = g["plan"]
-                chunks = plan.advance(lo, hi)
+                chunks = plan.advance(lo, hi_g)
                 if mem.name in plan.served:
-                    g["L"] = plan.served[mem.name].chunk(lo, hi)
+                    g["L"] = plan.served[mem.name].chunk(lo, hi_g)
                     g["spec_chunk"] = None
                     _rc.note_chunks(served=1)
                 elif plan.live_chunk_is_served(lo):
-                    g["L"] = plan.live_ops(mem.name, lo, hi)
+                    g["L"] = plan.live_ops(mem.name, lo, hi_g)
                     g["spec_chunk"] = None
                 else:
                     g["spec_chunk"] = chunks[mem.name]
@@ -317,7 +344,14 @@ def evaluate_candidates(
             # chunk
             fold_cache: dict[tuple, tuple] = {}
             for i, folder in enumerate(folders):
-                g = groups[gkeys[i]]
+                if lo >= n_iters_list[i]:
+                    continue
+                g = groups[gids[i]]
+                hi_g = min(hi, g["n"])
+                n = hi_g - lo
+                zero = zeros.get(n)
+                if zero is None:
+                    zero = zeros[n] = np.zeros(n, dtype=np.int32)
                 if g["spec_chunk"] is not None \
                         and g["stages"] is stage_lists[i]:
                     res = g["spec_chunk"]  # group spec: already folded
@@ -325,12 +359,12 @@ def evaluate_candidates(
                     bw = None
                     c_list, lat_list = [], []
                     for s, st in enumerate(stage_lists[i]):
-                        key = (gkeys[i], tuple(folder.stage_cols[s]),
+                        key = (gids[i], tuple(folder.stage_cols[s]),
                                st.ii, st.mem_in_scc)
                         hit = fold_cache.get(key)
                         if hit is None:
                             if bw is None:
-                                bw = folder.burst_words(lo, hi,
+                                bw = folder.burst_words(lo, hi_g,
                                                         mem.line_bytes)
                             hit = _fold_stage(
                                 mem, st.ii, st.mem_in_scc,
@@ -339,7 +373,7 @@ def evaluate_candidates(
                             fold_cache[key] = hit
                         c_list.append(hit[0])
                         lat_list.append(hit[1])
-                    res = _ResolvedChunk(lo, hi, c_list, lat_list)
+                    res = _ResolvedChunk(lo, hi_g, c_list, lat_list)
                 warm = None
                 for d in sorted(solvers[i], reverse=True):
                     warm = solvers[i][d].solve_chunk(
@@ -364,7 +398,8 @@ def evaluate_candidates(
 
 @dataclasses.dataclass
 class DseCandidate:
-    """One explored (plan, duplicate-toggle, FIFO-depth) point."""
+    """One explored (plan, duplicate-toggle, transform, memory-model,
+    FIFO-depth) point."""
 
     groups: tuple[tuple[int, ...], ...]   # plan signature (node-id groups)
     moves: tuple[str, ...]
@@ -376,6 +411,14 @@ class DseCandidate:
     pareto: bool = False
     compiled: Any = None                  # Compiled, attached on the front
     plan: StagePlan | None = dataclasses.field(default=None, repr=False)
+    #: transform-config signature ("none" = untransformed); ``tf`` keeps
+    #: the config object for re-materialization
+    transform: str = "none"
+    tf: Any = dataclasses.field(default=None, repr=False)
+    #: memory model this point was simulated on (multi-mem fronts)
+    mem_name: str = ""
+    #: channel tokens simulated (== n_iters unless unrolled)
+    n_tokens: int | None = None
 
     @property
     def fifo_bits(self) -> int:
@@ -386,6 +429,9 @@ class DseCandidate:
             "moves": list(self.moves),
             "duplicate": self.duplicate,
             "fifo_depth": self.fifo_depth,
+            "transform": self.transform,
+            "mem": self.mem_name,
+            "n_tokens": self.n_tokens,
             "cycles": self.cycles,
             "pruned": self.pruned,
             "pareto": self.pareto,
@@ -416,28 +462,58 @@ class DseResult:
     rescache_misses: int = 0
     #: from evaluate_candidates: distinct resolution groups / cold ones
     eval_stats: dict = dataclasses.field(default_factory=dict)
+    #: memory models spanned (multi-mem fronts; first = primary)
+    mem_names: tuple = ()
+    #: transform-config signatures explored alongside the baseline's
+    transforms: tuple = ()
 
     def evaluated(self) -> list[DseCandidate]:
         return [c for c in self.candidates if c.cycles is not None]
 
     def best(self) -> DseCandidate:
-        """Feasible candidate minimizing (cycles, fifo_bits); the
-        baseline when nothing else was evaluated."""
-        ev = [c for c in self.evaluated() if c.pruned is None]
+        """Feasible candidate minimizing (cycles, fifo_bits) on the
+        *primary* memory model; the baseline when nothing else was
+        evaluated."""
+        ev = [c for c in self.evaluated() if c.pruned is None
+              and c.mem_name == self.mem_name]
         if not ev:
             return self.baseline
         return min(ev, key=lambda c: (c.cycles, c.fifo_bits))
 
     def dominates_baseline(self) -> bool:
         """Does some candidate strictly dominate Algorithm 1's plan —
-        fewer cycles at ≤ the FIFO bits, or ≤ cycles at fewer bits?"""
+        fewer cycles at ≤ the FIFO bits, or ≤ cycles at fewer bits?
+        Compared on the baseline's memory model only (cross-model cycle
+        counts are not comparable)."""
         b = self.baseline
         if b.cycles is None:
             return bool(self.evaluated())
         return any(
             (c.cycles < b.cycles and c.fifo_bits <= b.fifo_bits)
             or (c.cycles <= b.cycles and c.fifo_bits < b.fifo_bits)
-            for c in self.evaluated() if c is not b)
+            for c in self.evaluated() if c is not b
+            and c.mem_name == b.mem_name)
+
+    def transformed_dominates(self) -> bool:
+        """Does some *transformed* candidate strictly dominate the best
+        untransformed point — fewer cycles at equal-or-lower FIFO bits —
+        on any explored memory model?  This is the widened-front gate
+        ``bench_trend.py`` enforces (a transformed front that stops
+        dominating the stage-regrouping-only front is a regression)."""
+        base_sig = self.baseline.transform
+        ev = [c for c in self.evaluated() if c.pruned is None]
+        for mn in self.mem_names or (self.mem_name,):
+            unt = [c for c in ev if c.mem_name == mn
+                   and c.transform == base_sig]
+            tfc = [c for c in ev if c.mem_name == mn
+                   and c.transform != base_sig]
+            if not unt or not tfc:
+                continue
+            u = min(unt, key=lambda c: (c.cycles, c.fifo_bits))
+            if any(t.cycles < u.cycles and t.fifo_bits <= u.fifo_bits
+                   for t in tfc):
+                return True
+        return False
 
     def to_json(self) -> dict:
         return {
@@ -445,11 +521,14 @@ class DseResult:
             "fifo_depth": self.fifo_depth,
             "fifo_depths": list(self.fifo_depths or (self.fifo_depth,)),
             "mem": self.mem_name,
+            "mems": list(self.mem_names or (self.mem_name,)),
+            "transforms": list(self.transforms),
             "wall_s": self.wall_s,
             "rescache_hits": self.rescache_hits,
             "rescache_misses": self.rescache_misses,
             **self.eval_stats,
             "dominates_baseline": self.dominates_baseline(),
+            "transformed_dominates": self.transformed_dominates(),
             "baseline": self.baseline.to_json(),
             "best": self.best().to_json(),
             "front": [c.to_json() for c in self.front],
@@ -470,20 +549,25 @@ class DseResult:
         ]
         multi_depth = len(set(self.fifo_depths
                               or (self.fifo_depth,))) > 1
+        multi_mem = len(set(self.mem_names or (self.mem_name,))) > 1
         for c in self.front:
             tag = " <- baseline" if c is self.baseline else ""
             depth = f", depth={c.fifo_depth}" if multi_depth else ""
+            mm = f", mem={c.mem_name}" if multi_mem else ""
+            tf = f", tf={c.transform}" if c.transform != "none" else ""
             lines.append(
                 f"  front: {c.cycles} cycles @ {c.fifo_bits} bits "
                 f"({c.resources['num_stages']} stages, dup="
-                f"{c.duplicate}{depth}, moves="
+                f"{c.duplicate}{depth}{mm}{tf}, moves="
                 f"{'/'.join(c.moves) or 'none'}){tag}")
         b = self.best()
         lines.append(
             f"  best: {b.cycles} cycles @ {b.fifo_bits} bits "
             f"(moves={'/'.join(b.moves) or 'none'}, dup={b.duplicate})"
             + ("  [strictly dominates Algorithm 1]"
-               if self.dominates_baseline() else ""))
+               if self.dominates_baseline() else "")
+            + ("  [transformed front dominates untransformed]"
+               if self.transformed_dominates() else ""))
         return "\n".join(lines)
 
 
@@ -498,6 +582,7 @@ def explore_plans(
     *,
     constraints: ResourceConstraints | None = None,
     mem: MemoryModel | None = None,
+    mems: Sequence[Any] | None = None,
     node_traces: Mapping[int, list[MemAccess]] | None = None,
     duplicate_base: bool = True,
     n_iters: int | None = None,
@@ -507,17 +592,34 @@ def explore_plans(
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
     server: str | None = None,
+    transforms: Sequence[Any] | None = None,
 ) -> DseResult:
     """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate,
-    FIFO depth)`` candidates (no ``Compiled`` construction — see
-    :func:`explore` / ``Compiled.explore`` for that layer).
+    transform, memory model, FIFO depth)`` candidates (no ``Compiled``
+    construction — see :func:`explore` / ``Compiled.explore`` for that
+    layer).
 
     ``fifo_depths`` turns on the *joint* partition×depth search: every
     (plan, duplicate) pair is costed and simulated at every depth (one
     resolution, one warm-started solve per depth), and the Pareto front
-    spans both axes.  The enumeration budget ``max_candidates`` counts
-    (plan, duplicate) pairs, not depth points."""
+    spans both axes.  ``transforms`` (a list of
+    :class:`~repro.dataflow.transforms.TransformConfig`, or the
+    ``unroll_factors`` / ``explore_coalesce`` / ``explore_reassoc``
+    constraint knobs) widens the search with the HLS transformation
+    catalog: each config is validated against the CDFG, its candidates
+    are materialized with scaled channel widths/II (so
+    ``max_fifo_bits`` prunes infeasible unroll factors before any
+    simulation), its op streams are rewritten once and shared across
+    candidates, and a ``reassoc`` request seeds the port-re-association
+    split in the plan enumeration.  ``mems`` spans several memory
+    models in one exploration (per-model Pareto fronts, concatenated;
+    the first — or the explicit ``mem`` — is primary and hosts the
+    baseline).  The enumeration budget ``max_candidates`` counts
+    *untransformed* (plan, duplicate) pairs; the depth / transform /
+    model grids multiply evaluated points, not the budget."""
     from ..core import rescache as _rc
+    from .transforms import IDENTITY, TransformConfig, \
+        transform_node_traces
     rc = constraints or ResourceConstraints()
     n_iters = rc.n_iters if n_iters is None else n_iters
     if fifo_depths is None:
@@ -530,14 +632,76 @@ def explore_plans(
     seed = rc.seed if seed is None else seed
     max_candidates = rc.max_candidates if max_candidates is None \
         else max_candidates
-    if mem is None:
-        mem = standard_memory_models()[rc.mem]()
+
+    # -- memory-model axis (multi-mem fronts) --------------------------------
+    if mems is None:
+        mems = getattr(rc, "mems", ()) or None
+    if mems:
+        models = standard_memory_models()
+        mem_list = [m if isinstance(m, MemoryModel) else models[m]()
+                    for m in mems]
+        if mem is not None:
+            mem_list = [mem] + [m for m in mem_list
+                                if m.name != mem.name]
+    else:
+        mem_list = [mem if mem is not None
+                    else standard_memory_models()[rc.mem]()]
+    mem = mem_list[0]
+    mem_names = tuple(m.name for m in mem_list)
+
     if node_traces is None:
         node_traces = traces_by_node(
-            cdfg, materialize(cdfg, base_plan), None,
+            cdfg, materialize(cdfg, base_plan, transforms=IDENTITY), None,
             n_iters=n_iters, seed=seed)
     cyclic = _cyclic_nodes(cdfg)
     cyclic_mem = {nid for nid in cyclic if cdfg.node(nid).is_memory}
+
+    # -- transform axis ------------------------------------------------------
+    # tf=None is the identity lane: the artifact's *own* config (its
+    # CDFG may already be transformed) — axis entries are absolute
+    # configs, not composed on top of it
+    base_cfg = getattr(cdfg, "transforms", None)
+    if base_cfg is not None and base_cfg.is_identity:
+        base_cfg = None
+    reassoc = bool(getattr(rc, "explore_reassoc", False))
+    src = transforms
+    if src is None:
+        src = []
+        for u in getattr(rc, "unroll_factors", ()) or ():
+            if u and int(u) > 1:
+                src.append(TransformConfig(unroll=int(u)))
+                if getattr(rc, "explore_coalesce", False):
+                    src.append(TransformConfig(unroll=int(u),
+                                               coalesce=True))
+    axis: list[Any] = []
+    for t in src:
+        if t is None:
+            continue
+        if t.reassoc:
+            reassoc = True
+            t = dataclasses.replace(t, reassoc=False)
+        if t.is_identity or t in axis:
+            continue
+        t.validate(cdfg)  # structural legality — raises TransformError
+        axis.append(t)
+    tf_axis: list[Any] = [None] + axis
+
+    # transformed op streams, derived once from the node traces and
+    # shared by every candidate of a lane (shared fingerprints, window/
+    # burst memos, resolution keys); coalescing never applies to memory
+    # ops on a dependence cycle (serialized per-request latency)
+    tf_traces: dict[str, Any] = {}
+
+    def _traces_for(eff: Any) -> Any:
+        key = eff.signature() if eff is not None else "none"
+        tr = tf_traces.get(key)
+        if tr is None:
+            tr = node_traces if eff is None or eff.is_identity \
+                else transform_node_traces(node_traces, eff,
+                                           serialized_nodes=cyclic_mem)
+            tf_traces[key] = tr
+        return tr
+
     # the §III-B1 duplication rewrite is a per-candidate *move*, explored
     # in both directions regardless of the base setting — forbid it
     # outright with max_duplicated_nodes=0
@@ -545,11 +709,14 @@ def explore_plans(
 
     stats0 = _rc.stats()
     t0 = time.perf_counter()
-    plans = enumerate_plans(cdfg, base_plan, max_candidates)
+    plans = enumerate_plans(cdfg, base_plan, max_candidates,
+                            reassoc=reassoc)
     candidates: list[DseCandidate] = []
     baseline: DseCandidate | None = None
-    #: one entry per simulated stage list: (per-depth candidates, stages)
-    sim_list: list[tuple[dict[int, DseCandidate], list[SimStage]]] = []
+    #: per mem: (per-depth candidates, stages, token count) per lane
+    sim_by_mem: dict[str, list[tuple[dict[int, DseCandidate],
+                                     list[SimStage], int]]] = \
+        {mn: [] for mn in mem_names}
     n_pairs = 0
     for moves, plan in plans:
         if n_pairs >= max_candidates and baseline is not None:
@@ -558,10 +725,13 @@ def explore_plans(
         for dup in dup_options:
             if n_pairs >= max_candidates and baseline is not None:
                 break
-            part = materialize(cdfg, plan)
+            psig = plan_signature(plan)
+            part0 = materialize(
+                cdfg, plan,
+                transforms=base_cfg if base_cfg is not None else IDENTITY)
             if dup:
-                duplicate_cheap_rewrite(part)
-                dup_effect = bool(part.duplicated)
+                duplicate_cheap_rewrite(part0)
+                dup_effect = bool(part0.duplicated)
             if dup != dup_options[0] and not dup_effect:
                 # the rewrite is a no-op for this plan: the toggled
                 # variant would be byte-identical — don't burn budget
@@ -569,28 +739,51 @@ def explore_plans(
                 continue
             n_pairs += 1
             is_base_pair = not moves and dup == duplicate_base
-            to_sim: dict[int, DseCandidate] = {}
-            for d in depths:
-                res = partition_resources(part, d)
-                cand = DseCandidate(
-                    groups=plan_signature(plan),
-                    moves=moves + (() if dup == duplicate_base
-                                   else ("duplicate" if dup
-                                         else "no-duplicate",)),
-                    duplicate=dup, resources=res, fifo_depth=d,
-                    plan=plan)
-                is_base = is_base_pair and d == primary_depth
-                cand.pruned = constraint_violation(res, rc)
-                # the baseline is always simulated — it is the
-                # comparison point even when it violates the constraints
-                if cand.pruned is None or is_base:
-                    to_sim[d] = cand
-                if is_base:
-                    baseline = cand
-                candidates.append(cand)
-            if to_sim:
-                sim_list.append((to_sim, sim_stages_for_partition(
-                    part, node_traces, cyclic_mem)))
+            for tf in tf_axis:
+                eff = tf if tf is not None else base_cfg
+                sig = eff.signature() if eff is not None else "none"
+                if tf is None:
+                    part = part0
+                else:
+                    part = materialize(cdfg, plan, transforms=eff)
+                    if dup:
+                        duplicate_cheap_rewrite(part)
+                ntk = eff.tokens(n_iters) if eff is not None else n_iters
+                tmoves = moves + (() if dup == duplicate_base
+                                  else ("duplicate" if dup
+                                        else "no-duplicate",))
+                if tf is not None:
+                    tmoves = tmoves + tf.active()
+                stages: list[SimStage] | None = None
+                for m in mem_list:
+                    to_sim: dict[int, DseCandidate] = {}
+                    for d in depths:
+                        res = partition_resources(part, d)
+                        cand = DseCandidate(
+                            groups=psig, moves=tmoves, duplicate=dup,
+                            resources=res, fifo_depth=d, plan=plan,
+                            transform=sig, tf=eff, mem_name=m.name,
+                            n_tokens=ntk)
+                        is_base = (is_base_pair and tf is None
+                                   and m is mem_list[0]
+                                   and d == primary_depth)
+                        cand.pruned = constraint_violation(res, rc)
+                        # the baseline is always simulated — it is the
+                        # comparison point even when it violates the
+                        # constraints
+                        if cand.pruned is None or is_base:
+                            to_sim[d] = cand
+                        if is_base:
+                            baseline = cand
+                        candidates.append(cand)
+                    if to_sim:
+                        if stages is None:
+                            # built lazily: a lane whose every depth is
+                            # pruned (an over-budget unroll factor)
+                            # never transforms its traces
+                            stages = sim_stages_for_partition(
+                                part, _traces_for(eff), cyclic_mem)
+                        sim_by_mem[m.name].append((to_sim, stages, ntk))
     if server:
         # resolve every distinct survivor group through the daemon
         # first (shared spawn-pool, in-flight dedup with concurrent
@@ -599,35 +792,54 @@ def explore_plans(
         # over-cap artifact just resolves cold locally as before.
         from ..serve.client import ServeUnavailable, prefetch
         addr = None if server == "auto" else server
-        for _, st in sim_list:
-            try:
-                prefetch(st, {mem.name: mem}, n_iters, seed=seed,
-                         address=addr)
-            except ServeUnavailable:
+        ok = True
+        for m in mem_list:
+            if not ok:
                 break
-    # one chunk-major pass simulates every survivor, sharing trace
-    # resolution across candidates (and with past/future runs via the
-    # chunk-granular rescache); each candidate's depth grid shares one
-    # fold and warm-starts shallower depths from deeper fixed points
-    cycles, eval_stats = evaluate_candidates(
-        [st for _, st in sim_list], mem, n_iters,
-        depth_lists=[tuple(by_depth) for by_depth, _ in sim_list],
-        seed=seed, use_rescache=use_rescache)
-    for (by_depth, _), cyc in zip(sim_list, cycles):
-        for d, cand in by_depth.items():
-            cand.cycles = cyc[d]
+            for _, st, ntk in sim_by_mem[m.name]:
+                try:
+                    prefetch(st, {m.name: m}, ntk, seed=seed,
+                             address=addr)
+                except ServeUnavailable:
+                    ok = False
+                    break
+    # one chunk-major pass per memory model simulates every survivor,
+    # sharing trace resolution across candidates (and with past/future
+    # runs via the chunk-granular rescache); each candidate's depth grid
+    # shares one fold and warm-starts shallower depths from deeper fixed
+    # points.  Transformed lanes run their shorter token streams on the
+    # same chunk grid (clamped per lane).
+    eval_stats = {"resolution_groups": 0, "cold_groups": 0}
+    for m in mem_list:
+        entries = sim_by_mem[m.name]
+        if not entries:
+            continue
+        cycles, es = evaluate_candidates(
+            [st for _, st, _ in entries], m, n_iters,
+            depth_lists=[tuple(bd) for bd, _, _ in entries],
+            n_iters_list=[ntk for _, _, ntk in entries],
+            seed=seed, use_rescache=use_rescache)
+        for (bd, _, _), cyc in zip(entries, cycles):
+            for d, cand in bd.items():
+                cand.cycles = cyc[d]
+        for k in eval_stats:
+            eval_stats[k] += es.get(k, 0)
     stats1 = _rc.stats()
 
-    # cycles-vs-FIFO-bits front over feasible evaluated candidates
+    # cycles-vs-FIFO-bits front per memory model over feasible
+    # evaluated candidates (cross-model cycles are not comparable, so
+    # each model gets its own frontier; the result concatenates them,
+    # primary model first)
     front: list[DseCandidate] = []
-    best_cycles: int | None = None
-    pool = [c for c in candidates
-            if c.cycles is not None and c.pruned is None]
-    for c in sorted(pool, key=lambda c: (c.fifo_bits, c.cycles)):
-        if best_cycles is None or c.cycles < best_cycles:
-            best_cycles = c.cycles
-            c.pareto = True
-            front.append(c)
+    for mn in mem_names:
+        best_cycles: int | None = None
+        pool = [c for c in candidates if c.mem_name == mn
+                and c.cycles is not None and c.pruned is None]
+        for c in sorted(pool, key=lambda c: (c.fifo_bits, c.cycles)):
+            if best_cycles is None or c.cycles < best_cycles:
+                best_cycles = c.cycles
+                c.pareto = True
+                front.append(c)
     return DseResult(
         baseline=baseline, candidates=candidates, front=front,
         n_iters=n_iters, fifo_depth=primary_depth, mem_name=mem.name,
@@ -635,27 +847,39 @@ def explore_plans(
         rescache_hits=stats1["mem_hits"] + stats1["disk_hits"]
         - stats0["mem_hits"] - stats0["disk_hits"],
         rescache_misses=stats1["misses"] - stats0["misses"],
-        eval_stats=eval_stats)
+        eval_stats=eval_stats, mem_names=mem_names,
+        transforms=tuple(t.signature() for t in axis))
 
 
 def compiled_with_plan(base: Any, plan: StagePlan,
-                       duplicate: bool) -> Any:
+                       duplicate: bool, transform: Any = None) -> Any:
     """Materialize a full ``Compiled`` artifact for one explored plan:
     the front-end products (jaxpr, CDFG) are shared with ``base``, the
-    partition is rebuilt from ``plan``, and the decouple/schedule passes
-    re-run.  Bypasses the compile cache (candidate plans are not
-    reachable from options alone)."""
+    partition is rebuilt from ``plan`` (with ``transform`` — a
+    :class:`~repro.dataflow.transforms.TransformConfig`, or ``None``
+    to inherit the base artifact's own config), and the
+    decouple/schedule passes re-run.  Bypasses the compile cache
+    (candidate plans are not reachable from options alone)."""
     from .driver import Compiled
     from .passes import CompileContext, DecouplePass, SchedulePass
-    opts = base.options.replace(duplicate_cheap=duplicate, dse=None)
+    from .transforms import IDENTITY
+    eff = transform if transform is not None \
+        else getattr(base.options, "transforms", None)
+    opts = base.options.replace(duplicate_cheap=duplicate, dse=None,
+                                transforms=eff)
     ctx = CompileContext(fn=base.fn,
                          example_args=base.context.example_args,
                          options=opts)
     ctx.closed_jaxpr = base.context.closed_jaxpr
     ctx.out_tree = base.context.out_tree
+    # the CDFG is shared with ``base`` — never mutate its ``transforms``
+    # annotation; pass the config straight into ``materialize`` instead
     ctx.cdfg = base.context.cdfg
     ctx.plan = plan
-    part = materialize(ctx.cdfg, plan)
+    part = materialize(
+        ctx.cdfg, plan,
+        transforms=eff if eff is not None and not eff.is_identity
+        else IDENTITY)
     if duplicate:
         duplicate_cheap_rewrite(part)
     ctx.partition = part
@@ -670,6 +894,7 @@ def explore(
     traces: Any = None,
     constraints: ResourceConstraints | None = None,
     mem: MemoryModel | None = None,
+    mems: Sequence[Any] | None = None,
     n_iters: int | None = None,
     fifo_depth: int | None = None,
     fifo_depths: Sequence[int] | None = None,
@@ -677,6 +902,7 @@ def explore(
     max_candidates: int | None = None,
     use_rescache: bool | None = None,
     server: str | None = None,
+    transforms: Sequence[Any] | None = None,
 ) -> DseResult:
     """``Compiled.explore`` implementation: explore re-partitionings of
     ``compiled``'s kernel and return the cycles-vs-FIFO-bits Pareto
@@ -684,7 +910,12 @@ def explore(
     best) candidate.  Pass ``fifo_depths=[...]`` for the joint
     partition×depth front (each candidate costed and simulated at every
     depth; the channel FIFO depth becomes a search axis instead of a
-    fixed parameter)."""
+    fixed parameter), ``transforms=[TransformConfig(...), ...]`` to
+    widen the search with the transformation catalog, and
+    ``mems=["ACP", "ACP+64KB", ...]`` (names or
+    :class:`~repro.core.memory.MemoryModel` instances) to span memory
+    models in one exploration — the front then carries one sub-front
+    per model, each candidate recording its model in ``mem_name``."""
     rc = constraints or compiled.options.dse or ResourceConstraints()
     n_iters = rc.n_iters if n_iters is None else n_iters
     seed = rc.seed if seed is None else seed
@@ -693,17 +924,28 @@ def explore(
         n_iters=n_iters, seed=seed)
     result = explore_plans(
         compiled.cdfg, compiled.context.plan,
-        constraints=rc, mem=mem, node_traces=node_traces,
+        constraints=rc, mem=mem, mems=mems, node_traces=node_traces,
         duplicate_base=compiled.options.duplicate_cheap,
         n_iters=n_iters, fifo_depth=fifo_depth,
         fifo_depths=fifo_depths, seed=seed,
         max_candidates=max_candidates, use_rescache=use_rescache,
-        server=server)
+        server=server, transforms=transforms)
+    artifacts: dict[tuple, Any] = {}
     for cand in {id(c): c for c in result.front + [result.best()]}.values():
         if cand.compiled is None:
             # the baseline IS the caller's artifact (same plan, same
-            # duplication setting) — no need to re-decouple/schedule
-            cand.compiled = compiled if cand is result.baseline \
-                else compiled_with_plan(compiled, cand.plan,
-                                        cand.duplicate)
+            # duplication setting, same transform config) — no need to
+            # re-decouple/schedule; otherwise one artifact per distinct
+            # (plan, duplicate, transform), shared across the mem/depth
+            # grid
+            if cand is result.baseline:
+                cand.compiled = compiled
+                continue
+            key = (cand.groups, cand.duplicate, cand.transform)
+            art = artifacts.get(key)
+            if art is None:
+                art = compiled_with_plan(compiled, cand.plan,
+                                         cand.duplicate, cand.tf)
+                artifacts[key] = art
+            cand.compiled = art
     return result

@@ -49,9 +49,25 @@ class ResourceConstraints:
       ``max_candidates`` — enumeration budget (BFS over merge/split
         moves from the Algorithm 1 plan; the fused and maximal
         degenerate plans are always included).  Counts (plan,
-        duplicate) pairs; the depth grid multiplies evaluated points,
-        not the budget.
+        duplicate) pairs; the depth / transform / memory-model grids
+        multiply evaluated points, not the budget.
       ``seed``           — simulation seed.
+
+    Transform-axis knobs (the catalog in ``repro.dataflow.transforms``;
+    all off by default so the stage-regrouping-only search is
+    unchanged):
+      ``unroll_factors``   — unroll factors to explore as DSE moves
+        (e.g. ``(2, 4)``); each factor's FIFO-bit cost scales with the
+        widened channels, so ``max_fifo_bits`` prunes them exactly like
+        regrouped plans.
+      ``explore_coalesce`` — additionally try each unroll factor with
+        access coalescing (legality-checked per op stream).
+      ``explore_reassoc``  — seed the plan enumeration with the
+        memory-port re-association split (multi-region stages split by
+        region).
+      ``mems``             — memory-model names to span in one
+        exploration (empty = just ``mem``); front points record their
+        model.
     """
 
     max_fifo_bits: int | None = None
@@ -64,11 +80,18 @@ class ResourceConstraints:
     mem: str = "ACP"
     max_candidates: int = 64
     seed: int = 0
+    unroll_factors: Any = ()
+    explore_coalesce: bool = False
+    explore_reassoc: bool = False
+    mems: Any = ()
 
     def __post_init__(self) -> None:
         if self.fifo_depths is not None:
             object.__setattr__(self, "fifo_depths",
                                tuple(self.fifo_depths))
+        object.__setattr__(self, "unroll_factors",
+                           tuple(self.unroll_factors))
+        object.__setattr__(self, "mems", tuple(self.mems))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +124,16 @@ class CompileOptions:
         the Algorithm 1 plan under these constraints (each candidate
         fully simulated) and compiles the winner;
         ``compiled.dse_result`` keeps the explored front.
+
+    Transformation catalog:
+      ``transforms`` — a
+        :class:`repro.dataflow.transforms.TransformConfig` (or ``None``).
+        When set, the ``transform`` pass validates it against the
+        analyzed CDFG and the partition/schedule layers apply it: unroll
+        widens channels and scales SCC II, coalescing merges legal
+        unrolled access groups into burst-width ops, tiling permutes the
+        simulated iteration space, reassoc splits multi-region stages.
+        Frozen/hashable, so it participates in the compile cache key.
     """
 
     policy: str = "paper"
@@ -116,6 +149,7 @@ class CompileOptions:
     nonaliasing_carries: Any = ()
     stream_argnums: Any = (0,)
     dse: ResourceConstraints | None = None
+    transforms: Any = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "latency_table", _freeze(self.latency_table))

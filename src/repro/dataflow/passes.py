@@ -4,9 +4,11 @@ Each pass is a named object with a ``run(ctx)`` method that reads/writes
 fields of a shared :class:`CompileContext`.  The default pipeline mirrors
 the paper's flow —
 
-    trace → memdep → partition → rewrite → dse → decouple → schedule
+    trace → memdep → transform → partition → rewrite → dse → decouple → schedule
 
-(``dse`` is a no-op unless ``options.dse`` opts into partition-space
+(``transform`` is a no-op unless ``options.transforms`` activates the
+HLS transformation catalog — see ``repro.dataflow.transforms`` — and
+``dse`` is a no-op unless ``options.dse`` opts into partition-space
 exploration) — with each step delegating to the corresponding
 ``repro.core`` function
 (the paper-faithful implementations stay in core; this module only
@@ -107,14 +109,41 @@ class MemoryDepPass(Pass):
             add_memory_order_edges(ctx.cdfg)
 
 
+class TransformPass(Pass):
+    """The HLS transformation catalog (``repro.dataflow.transforms``):
+    validate ``options.transforms`` against the analyzed CDFG (memdep
+    has run, so regions and carry cycles are known) and annotate the
+    CDFG with the active config — ``materialize`` / ``derive_channels``
+    read it to scale stage II/latency and channel widths, the schedule
+    layer rewrites the simulated access streams, and
+    :class:`PartitionPass` applies the reassoc split.  No-op when
+    ``options.transforms`` is unset or the identity."""
+
+    name = "transform"
+
+    def run(self, ctx: CompileContext) -> None:
+        cfg = getattr(ctx.options, "transforms", None)
+        if cfg is None or cfg.is_identity:
+            ctx.cdfg.transforms = None
+            return
+        cfg.validate(ctx.cdfg)
+        ctx.cdfg.transforms = cfg
+
+
 class PartitionPass(Pass):
     """Algorithm 1: SCCs → condensation → topo order → stage groups,
-    materialized into a Partition with FIFO channels."""
+    materialized into a Partition with FIFO channels.  When the active
+    transform config asks for memory-port re-association, the plan's
+    multi-region stages are split by region first."""
 
     name = "partition"
 
     def run(self, ctx: CompileContext) -> None:
         ctx.plan = stage_groups(ctx.cdfg, policy=ctx.options.policy)
+        cfg = getattr(ctx.cdfg, "transforms", None)
+        if cfg is not None and cfg.reassoc:
+            from .transforms import split_by_region
+            ctx.plan = split_by_region(ctx.cdfg, ctx.plan)
         ctx.partition = materialize(ctx.cdfg, ctx.plan)
 
 
@@ -160,8 +189,14 @@ class DsePass(Pass):
         if best.plan is not None and best is not result.baseline:
             from ..core.partition import (duplicate_cheap_rewrite,
                                           materialize)
+            from .transforms import IDENTITY
             ctx.plan = best.plan
-            ctx.partition = materialize(ctx.cdfg, best.plan)
+            tf = getattr(best, "tf", None)
+            ctx.cdfg.transforms = tf if tf is not None \
+                and not tf.is_identity else None
+            ctx.partition = materialize(
+                ctx.cdfg, best.plan,
+                transforms=tf if tf is not None else IDENTITY)
             if best.duplicate:
                 duplicate_cheap_rewrite(ctx.partition)
 
@@ -250,6 +285,6 @@ class PassPipeline:
 
 
 def default_pipeline() -> PassPipeline:
-    return PassPipeline((TracePass(), MemoryDepPass(), PartitionPass(),
-                         RewritePass(), DsePass(), DecouplePass(),
-                         SchedulePass()))
+    return PassPipeline((TracePass(), MemoryDepPass(), TransformPass(),
+                         PartitionPass(), RewritePass(), DsePass(),
+                         DecouplePass(), SchedulePass()))

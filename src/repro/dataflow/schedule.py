@@ -41,6 +41,9 @@ class StageSummary:
     memory_node_ids: tuple[int, ...]
     in_channel_bytes: int
     out_channel_bytes: int
+    #: unscaled dependence-cycle latency (``ii``/``latency`` already
+    #: reflect the active transform config; this recovers the base)
+    scc_ii: int = 0
 
 
 def _cyclic_nodes(cdfg: Any) -> set[int]:
@@ -64,6 +67,9 @@ class Schedule:
     stages: list[StageSummary]
     num_channels: int
     channel_bytes: int
+    #: active TransformConfig carried from the partition (None =
+    #: untransformed); stage timing and channel_bytes already reflect it
+    transforms: Any = None
     _pipeline: SystolicPipeline | None = None
 
     @classmethod
@@ -92,10 +98,12 @@ class Schedule:
                 memory_node_ids=mem_ids,
                 in_channel_bytes=in_bytes[s.id],
                 out_channel_bytes=out_bytes[s.id],
+                scc_ii=getattr(s, "scc_ii", 0),
             ))
         return cls(program, tuple(stream_argnums), summaries,
                    num_channels=len(part.channels),
-                   channel_bytes=sum(c.nbytes for c in part.channels))
+                   channel_bytes=sum(c.nbytes for c in part.channels),
+                   transforms=getattr(part, "transforms", None))
 
     # -- derived quantities ---------------------------------------------------
 
@@ -152,6 +160,7 @@ class Schedule:
         n_iters: int = 2048,
         seed: int = 0,
         address_space: int = 4 << 20,
+        apply_transforms: bool = True,
     ) -> list[SimStage]:
         """Build cycle-simulator stages from the partition.
 
@@ -165,7 +174,20 @@ class Schedule:
           ops in pipeline-stage order (the Fig. 5 benchmark convention);
         * ``None`` — synthetic uniform-random word addresses, the
           cache-hostile default.
-        """
+
+        Traces are always supplied per *original iteration*; when a
+        transform config is active (and ``apply_transforms``), each op's
+        stream is rewritten through the catalog (tile permutation, U
+        strided unroll sub-streams, coalesced burst ops — coalescing is
+        skipped for ``mem_in_scc`` stages, whose serialized accesses pay
+        per-request latency) and the stages expect
+        ``transforms.tokens(n_iters)`` simulated tokens.
+        ``apply_transforms=False`` returns the *untransformed* machine —
+        raw streams and unscaled II/latency — which is what the
+        conventional-HLS comparison runs."""
+        cfg = self.transforms
+        if cfg is not None and cfg.is_identity:
+            cfg = None
         rng = np.random.default_rng(seed)
         out: list[SimStage] = []
         if traces is None or isinstance(traces, Mapping):
@@ -191,10 +213,22 @@ class Schedule:
                     if ti < len(trace_list):
                         accesses.append(trace_list[ti])
                         ti += 1
+            ii, latency = s.ii, s.latency
+            if cfg is not None:
+                if apply_transforms:
+                    from .transforms import transform_access
+                    accesses = [t for a in accesses
+                                for t in transform_access(
+                                    cfg, a,
+                                    allow_coalesce=not s.mem_in_scc)]
+                elif cfg.unroll > 1 and s.scc_ii > 0:
+                    # undo the unroll scaling baked in by materialize
+                    ii = max(1, s.scc_ii)
+                    latency = s.latency - (cfg.unroll - 1) * s.scc_ii
             out.append(SimStage(
                 name=f"s{s.id}",
-                ii=s.ii,
-                latency=max(1, s.latency),
+                ii=ii,
+                latency=max(1, latency),
                 accesses=accesses,
                 mem_in_scc=s.mem_in_scc,
             ))
@@ -270,20 +304,28 @@ def simulate_schedule(
     server: str | None = None,
 ) -> SimReport:
     mem = mem or acp()
+    cfg = getattr(schedule, "transforms", None)
+    transformed = cfg is not None and not cfg.is_identity
     stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    # the dataflow machine runs the transformed pipeline over its token
+    # stream; the conventional baseline runs the *untransformed* fused
+    # machine over the original iterations (same total work)
+    n_df = cfg.tokens(n_iters) if transformed else n_iters
+    base_stages = stages if not transformed else schedule.sim_stages(
+        traces, n_iters=n_iters, seed=seed, apply_transforms=False)
     if server:
         # resolve through the daemon first (shared pool, in-flight
         # dedup); the local run below then serves from the store —
         # best-effort, so a missing daemon costs nothing
         from ..serve.client import ServeUnavailable, prefetch
         try:
-            prefetch(stages, {"mem": mem}, n_iters, seed=seed,
+            prefetch(stages, {"mem": mem}, n_df, seed=seed,
                      address=None if server == "auto" else server)
         except ServeUnavailable:
             pass
-    df = simulate_dataflow(stages, mem, n_iters, fifo_depth=fifo_depth,
+    df = simulate_dataflow(stages, mem, n_df, fifo_depth=fifo_depth,
                            seed=seed, use_rescache=use_rescache)
-    cv = simulate_conventional([fused_stage(stages)], mem, n_iters,
+    cv = simulate_conventional([fused_stage(base_stages)], mem, n_iters,
                                seed=seed, use_rescache=use_rescache)
     return SimReport(schedule, stages, df, cv, mem, n_iters, microbatches)
 
@@ -427,7 +469,16 @@ def sweep_schedule(
     wpcs = tuple(words_per_cycle) if words_per_cycle is not None else (None,)
     mos = tuple(max_outstandings) if max_outstandings is not None \
         else (max_outstanding,)
+    cfg = getattr(schedule, "transforms", None)
+    transformed = cfg is not None and not cfg.is_identity
+    tf_sig = cfg.signature() if transformed else "none"
     base_stages = schedule.sim_stages(traces, n_iters=n_iters, seed=seed)
+    # transformed pipelines stream tokens (U iterations each); the
+    # conventional baseline always runs the untransformed fused machine
+    # over the original iterations — same total work on both sides
+    n_df = cfg.tokens(n_iters) if transformed else n_iters
+    conv_stages = base_stages if not transformed else schedule.sim_stages(
+        traces, n_iters=n_iters, seed=seed, apply_transforms=False)
     channel_bits = schedule.channel_bytes * 8
 
     def variant(mk: Callable[[], MemoryModel], wpc, mo) -> MemoryModel:
@@ -442,7 +493,7 @@ def sweep_schedule(
     # knobs, SCC-independent), shared across the rest of the grid
     conv_mems = {mn: variant(mk, None, mos[0]) for mn, mk in mems.items()}
     conv = simulate_conventional_many(
-        [fused_stage(base_stages)], conv_mems, n_iters,
+        [fused_stage(conv_stages)], conv_mems, n_iters,
         freq_mhz=freq_mhz, seed=seed, use_rescache=use_rescache)
 
     # the engine the dataflow grid actually runs on, recorded per row
@@ -471,7 +522,7 @@ def sweep_schedule(
                     variants[vn] = (mn, wpc, mo)
                     vmems[vn] = variant(mk, wpc, mo)
         grid = simulate_dataflow_many(
-            stages, vmems, n_iters, fifo_depths=fifo_depths,
+            stages, vmems, n_df, fifo_depths=fifo_depths,
             freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
             use_rescache=use_rescache, workers=workers,
             depth_incremental=depth_incremental, server=server)
@@ -484,6 +535,8 @@ def sweep_schedule(
                     "mem": mn,
                     "fifo_depth": depth,
                     "fifo_bits": depth * channel_bits,
+                    "transform": tf_sig,
+                    "n_tokens": n_df,
                     "mem_in_scc": mode,
                     "words_per_cycle": m.words_per_cycle,
                     "max_outstanding": m.max_outstanding,

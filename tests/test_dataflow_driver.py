@@ -291,7 +291,8 @@ def test_cache_miss_on_changed_shapes():
 
 def test_default_pipeline_names():
     assert default_pipeline().names() == [
-        "trace", "memdep", "partition", "rewrite", "dse", "decouple",
+        "trace", "memdep", "transform", "partition", "rewrite", "dse",
+        "decouple",
         "schedule"]
 
 

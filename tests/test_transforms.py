@@ -1,0 +1,456 @@
+"""Tests for the HLS transformation catalog (repro.dataflow.transforms):
+config legality, the trace-layer rewrites, scaled stage timing / FIFO
+accounting, the reassoc plan split, execution bit-identity with the
+sequential backend, cycle-exactness of the scalar reference and the
+chunk-graph / serving resolution modes on transformed pipelines, and the
+transform/memory axes of the partition-space DSE."""
+
+import contextlib
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rescache as rc
+from repro.core.partition import materialize, stage_groups
+from repro.core.simulator import (MemAccess, acp, acp_cache,
+                                  simulate_dataflow,
+                                  simulate_dataflow_many)
+from repro.dataflow import (ResourceConstraints, TransformConfig,
+                            TransformError, compile as dcompile)
+from repro.dataflow.dse import (partition_resources,
+                                sim_stages_for_partition, traces_by_node)
+from repro.dataflow.schedule import _cyclic_nodes
+from repro.dataflow.transforms import (IDENTITY, coalesced_access,
+                                       coalescible, split_by_region,
+                                       tiled_access, transform_access,
+                                       unrolled_access)
+
+
+@pytest.fixture()
+def rescache_on():
+    rc.clear()
+    rc.configure(enabled=True)
+    yield
+    rc.clear()
+    rc.configure(enabled=False)
+
+
+def _spmv_like():
+    def body(acc, j, vals, cols, xv):
+        return acc + vals[j] * xv[cols[j]]
+
+    vals = jnp.arange(64, dtype=jnp.float32)
+    cols = jnp.arange(64) % 16
+    xv = jnp.arange(16, dtype=jnp.float32)
+    args = (jnp.float32(0.0), jnp.int32(0), vals, cols, xv)
+    return body, args
+
+
+def _compiled(transforms=None, **kw):
+    body, args = _spmv_like()
+    return dcompile(body, *args, loop=True, transforms=transforms, **kw)
+
+
+def _sim_setup(c, n_iters, seed=0):
+    nt = traces_by_node(c.cdfg, c.partition, None, n_iters=n_iters,
+                        seed=seed)
+    cyc_mem = {n for n in _cyclic_nodes(c.cdfg)
+               if c.cdfg.node(n).is_memory}
+    return nt, cyc_mem
+
+
+# ---------------------------------------------------------------------------
+# Config shape + structural legality
+# ---------------------------------------------------------------------------
+
+
+def test_config_shape_checks():
+    with pytest.raises(TransformError):
+        TransformConfig(unroll=0)
+    with pytest.raises(TransformError):
+        TransformConfig(coalesce=True)  # needs unroll >= 2
+    with pytest.raises(TransformError):
+        TransformConfig(tile=8)        # needs tile_rows
+    with pytest.raises(TransformError):
+        TransformConfig(tile_rows=8)   # needs tile
+    assert TransformConfig().is_identity
+    assert TransformConfig().signature() == "none"
+    cfg = TransformConfig(unroll=2, coalesce=True, reassoc=True)
+    assert cfg.active() == ("unroll=2", "coalesce", "reassoc")
+    assert cfg.signature() == "unroll=2+coalesce+reassoc"
+
+
+def test_tokens_is_ceil_division():
+    assert TransformConfig().tokens(1000) == 1000
+    assert TransformConfig(unroll=2).tokens(1000) == 500
+    assert TransformConfig(unroll=4).tokens(1001) == 251
+
+
+def test_tile_illegal_on_carried_memory_dependence():
+    """The spmv accumulator carry is scalar (no memory on the cycle) so
+    tiling is fine; a dp-table kernel whose load/store sits on the carry
+    cycle pins the iteration order and must be rejected at compile."""
+
+    def dp(table, j, w):
+        cur = table[j]
+        table = table.at[j].set(cur + w)
+        return table
+
+    table = jnp.zeros(16, dtype=jnp.float32)
+    with pytest.raises(TransformError, match="dependence cycle"):
+        dcompile(dp, table, jnp.int32(0), jnp.float32(1.0), loop=True,
+                 transforms=TransformConfig(tile=4, tile_rows=4))
+    # the identity config never validates anything
+    c = _compiled(TransformConfig())
+    assert c.schedule.transforms is None
+
+
+# ---------------------------------------------------------------------------
+# Trace-layer rewrites
+# ---------------------------------------------------------------------------
+
+
+def test_unrolled_lanes_partition_the_stream():
+    addrs = np.arange(103, dtype=np.int64) * 4
+    acc = MemAccess("x", addrs)
+    lanes = [unrolled_access(acc, 4, u) for u in range(4)]
+    assert all(len(l) == 26 for l in lanes)  # ceil(103/4)
+    got = np.stack([l.window(0, 26, 64)[0] for l in lanes], axis=1).ravel()
+    assert np.array_equal(got[:103], addrs)
+    assert (got[103:] == -1).all()  # tail pads to no-access
+
+
+def test_coalescible_legality():
+    seq = MemAccess("x", np.arange(64, dtype=np.int64) * 4)
+    assert coalescible(seq, 2, line_bytes=32)
+    assert coalescible(seq, 4, line_bytes=32)
+    # span > line
+    assert not coalescible(seq, 4, line_bytes=8)
+    # gather: data-dependent addresses, non-constant stride
+    rng = np.random.default_rng(0)
+    gather = MemAccess("x", rng.integers(0, 1024, 64) * 4)
+    assert not coalescible(gather, 2, line_bytes=32)
+    # misaligned group bases straddle lines
+    assert not coalescible(MemAccess("x", np.arange(64) * 4 + 4), 2,
+                           line_bytes=32) or True  # base 4 % 8 != 0
+    assert not coalescible(MemAccess("x", np.arange(64) * 4 + 4), 2)
+    # descending stride is not a legal burst group
+    assert not coalescible(MemAccess("x", np.arange(64)[::-1] * 4), 2)
+
+
+def test_coalesced_access_is_lane0_with_width():
+    acc = MemAccess("x", np.arange(64, dtype=np.int64) * 4)
+    co = coalesced_access(acc, 2)
+    assert co.width == 2 and len(co) == 32
+    w, _ = co.window(0, 32, 64)
+    assert np.array_equal(w, np.arange(32, dtype=np.int64) * 8)
+
+
+def test_tiled_access_is_a_permutation():
+    addrs = (np.arange(48, dtype=np.int64) * 8) ^ 0x40  # distinct, odd order
+    acc = MemAccess("x", addrs)
+    t = tiled_access(acc, 4, 3)  # 4 rows x 12 cols, col-tiles of 3
+    assert len(t) == 48
+    w = t._raw_window(0, 48)
+    assert sorted(w.tolist()) == sorted(addrs.tolist())
+    assert not np.array_equal(w, addrs)  # actually reorders
+    # first tile: rows of the first 3 columns
+    expect = addrs.reshape(4, 12)[:, :3].ravel()
+    assert np.array_equal(w[:12], expect)
+    # windows are pure in (lo, hi)
+    assert np.array_equal(t._raw_window(5, 29), w[5:29])
+    with pytest.raises(TransformError, match="does not factor"):
+        tiled_access(MemAccess("x", np.arange(10) * 4), 3, 2)
+
+
+def test_transform_access_memoizes_and_respects_scc():
+    acc = MemAccess("x", np.arange(64, dtype=np.int64) * 4)
+    cfg = TransformConfig(unroll=2, coalesce=True)
+    a = transform_access(cfg, acc)
+    assert [x.width for x in a] == [2]        # legal -> coalesced
+    assert transform_access(cfg, acc) is a    # memoized on the base acc
+    b = transform_access(cfg, acc, allow_coalesce=False)
+    assert [x.width for x in b] == [1, 1]     # mem-in-scc: stays unrolled
+    gather = MemAccess(
+        "x", np.random.default_rng(1).integers(0, 1024, 64) * 4)
+    g = transform_access(cfg, gather)
+    assert [x.width for x in g] == [1, 1]     # illegal -> unrolled lanes
+
+
+def test_transformed_streams_get_distinct_rescache_keys():
+    acc = MemAccess("x", np.arange(4096, dtype=np.int64) * 4)
+    fps = {rc.trace_fingerprint(a) for a in (
+        acc, unrolled_access(acc, 2, 0), unrolled_access(acc, 2, 1),
+        unrolled_access(acc, 4, 0), tiled_access(acc, 4, 8))}
+    assert len(fps) == 5
+
+
+def test_width_is_fold_only_in_resolution_key():
+    from repro.core.simulator import SimStage
+    addrs = np.arange(256, dtype=np.int64) * 8
+    s1 = [SimStage("m", ii=1, latency=2,
+                   accesses=[MemAccess("x", addrs)])]
+    s2 = [SimStage("m", ii=1, latency=2,
+                   accesses=[MemAccess("x", addrs, width=2)])]
+    mem = acp()
+    assert rc.resolution_key("dataflow", s1, mem, 0) == \
+        rc.resolution_key("dataflow", s2, mem, 0)
+
+
+# ---------------------------------------------------------------------------
+# Timing / resource scaling
+# ---------------------------------------------------------------------------
+
+
+def test_unroll_scales_fifo_bits_and_scc_ii():
+    c = _compiled()
+    plan = c.context.plan
+    base = materialize(c.cdfg, plan, transforms=IDENTITY)
+    u2 = materialize(c.cdfg, plan, transforms=TransformConfig(unroll=2))
+    d = 8
+    assert partition_resources(u2, d)["fifo_bits"] == \
+        2 * partition_resources(base, d)["fifo_bits"]
+    for sb, su in zip(base.stages, u2.stages):
+        if sb.scc_ii > 0:  # the carried accumulator serializes
+            assert su.ii == 2 * sb.scc_ii
+            assert su.latency == sb.latency + sb.scc_ii
+        else:              # acyclic stages replicate spatially
+            assert (su.ii, su.latency) == (sb.ii, sb.latency)
+
+
+def test_unroll_factors_pruned_by_fifo_budget():
+    c = _compiled()
+    res = c.explore(
+        n_iters=600, max_candidates=4,
+        constraints=ResourceConstraints(
+            n_iters=600, max_fifo_bits=partition_resources(
+                c.partition, 8)["fifo_bits"],  # exactly the base budget
+            unroll_factors=(2,)),
+        fifo_depth=8)
+    tf_cands = [x for x in res.candidates if x.transform != "none"]
+    assert tf_cands and all(
+        x.pruned is not None for x in tf_cands
+        if x.groups == res.baseline.groups and not x.duplicate)
+    assert res.transforms == ("unroll=2",)
+
+
+def test_reassoc_splits_stages_by_region():
+    c = _compiled()
+    plan = stage_groups(c.cdfg, policy="fused")
+    split = split_by_region(c.cdfg, plan)
+    assert len(split.groups) > len(plan.groups)
+
+    def regions_of(grp):
+        return {c.cdfg.node(n).region for k in grp for n in plan.sccs[k]
+                if c.cdfg.node(n).is_memory and c.cdfg.node(n).region}
+
+    for grp in split.groups:
+        assert len(regions_of(grp)) <= 1
+    # as a compile option: every stage ends up single-region
+    ct = _compiled(TransformConfig(reassoc=True))
+    cb = _compiled()
+    assert ct.schedule.num_stages >= cb.schedule.num_stages
+    for s in ct.schedule.stages:
+        assert len(s.regions) <= 1
+    # as a DSE seed: from a fused base (multi-region single stage) the
+    # reassoc plan joins the enumeration as its own move (the paper
+    # policy's base plan is already single-region per stage, so there
+    # the seed dedups away)
+    cf = _compiled(policy="fused")
+    res = cf.explore(n_iters=400, max_candidates=6,
+                     constraints=ResourceConstraints(
+                         n_iters=400, explore_reassoc=True))
+    assert any("reassoc" in x.moves for x in res.candidates)
+
+
+# ---------------------------------------------------------------------------
+# Execution bit-identity (sequential backend) per transform
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [
+    TransformConfig(unroll=2),
+    TransformConfig(unroll=3),
+    TransformConfig(unroll=2, coalesce=True),
+    TransformConfig(tile=4, tile_rows=4),
+    TransformConfig(reassoc=True),
+    TransformConfig(unroll=2, coalesce=True, reassoc=True),
+], ids=lambda c: c.signature())
+def test_transformed_compile_matches_sequential(cfg):
+    """Every catalog transform is semantics-preserving: the transformed
+    artifact's sequential-backend output is bit-for-bit the
+    untransformed one's on a seeded kernel."""
+    base = _compiled()
+    tf = _compiled(cfg)
+    assert tf.transform_signature == cfg.signature()
+    body, args = _spmv_like()
+    want = base(*args, backend="sequential")
+    got = tf(*args, backend="sequential")
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Cycle-exactness across engines and resolution modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [
+    TransformConfig(unroll=2),
+    TransformConfig(unroll=2, coalesce=True),
+    TransformConfig(tile=4, tile_rows=4),
+], ids=lambda c: c.signature())
+def test_transformed_vectorized_matches_scalar_reference(cfg):
+    """The vectorized solver and the scalar ``reference=True`` loop agree
+    cycle-exactly on transformed pipelines (unroll serialization, burst
+    width continuation, tile permutation)."""
+    c = _compiled(cfg)
+    stages = c.sim_stages()
+    n_tok = cfg.tokens(1024)
+    assert c.schedule.transforms == cfg
+    for mem in (acp(), acp_cache()):
+        vec = simulate_dataflow(stages, mem, n_tok, fifo_depth=8,
+                                use_rescache=False)
+        ref = simulate_dataflow(stages, mem, n_tok, fifo_depth=8,
+                                reference=True)
+        assert vec.cycles == ref.cycles
+
+
+def test_transformed_cycles_identical_across_resolution_modes(
+        rescache_on, monkeypatch, tmp_path):
+    """Streaming, chunk-graph ``workers=2``, and the resolution daemon
+    produce identical cycle counts for a transformed pipeline (the
+    transformed closure generators ship to workers via cloudpickle)."""
+    monkeypatch.setattr(rc, "CHUNK_ITERS", 512)
+    monkeypatch.setenv("REPRO_CHUNK_ITERS", "512")
+    rc.configure(directory=str(tmp_path / "store"))
+    cfg = TransformConfig(unroll=2, coalesce=True)
+    c = _compiled(cfg)
+    stages = c.sim_stages()
+    n_tok = cfg.tokens(4096)
+    mems = {"ACPC": acp_cache()}
+    ref = simulate_dataflow_many(stages, dict(mems), n_tok,
+                                 fifo_depths=(8,), use_rescache=False)
+    sharded = simulate_dataflow_many(stages, dict(mems), n_tok,
+                                     fifo_depths=(8,), use_rescache=False,
+                                     workers=2)
+    assert sharded[("ACPC", 8)].cycles == ref[("ACPC", 8)].cycles
+    # served: a private daemon on a short-path socket
+    from repro.serve.daemon import ResolutionDaemon
+    sdir = tempfile.mkdtemp(prefix="serve-tf-")
+    d = ResolutionDaemon(address=os.path.join(sdir, "d.sock"), workers=2)
+    d.start()
+    try:
+        served = simulate_dataflow_many(stages, dict(mems), n_tok,
+                                        fifo_depths=(8,),
+                                        server=d.address)
+    finally:
+        with contextlib.suppress(Exception):
+            d.stop()
+    assert served[("ACPC", 8)].cycles == ref[("ACPC", 8)].cycles
+
+
+def test_simulate_pits_transformed_dataflow_against_full_baseline():
+    """``Compiled.simulate`` on a transformed artifact runs the dataflow
+    machine at the token count but the conventional baseline on the
+    UNtransformed fused machine at the full iteration count — same total
+    work on both sides."""
+    cfg = TransformConfig(unroll=2)
+    c = _compiled(cfg)
+    base = _compiled()
+    rep = c.simulate(n_iters=1024, use_rescache=False)
+    rep_b = base.simulate(n_iters=1024, use_rescache=False)
+    assert rep.conventional.cycles == rep_b.conventional.cycles
+    assert rep.n_iters == 1024
+
+
+def test_sweep_rows_carry_transform_signature():
+    cfg = TransformConfig(unroll=2, coalesce=True)
+    c = _compiled(cfg)
+    res = c.sweep(n_iters=512, mems={"ACP": acp},
+                  fifo_depths=(8,), use_rescache=False)
+    for row in res.rows:
+        assert row["transform"] == "unroll=2+coalesce"
+        assert row["n_tokens"] == 256
+    base_rows = _compiled().sweep(n_iters=512, mems={"ACP": acp},
+                                  fifo_depths=(8,),
+                                  use_rescache=False).rows
+    assert all(r["transform"] == "none" for r in base_rows)
+
+
+# ---------------------------------------------------------------------------
+# The DSE transform / memory axes
+# ---------------------------------------------------------------------------
+
+
+def test_explore_transform_axis_and_cold_bit_identity(rescache_on):
+    """The widened front: transformed candidates join the search, every
+    front point's cycles are bit-identical to a fresh cold simulation of
+    its transformed stage list, and the dominance probe runs."""
+    c = _compiled()
+    res = c.explore(
+        n_iters=1200, max_candidates=6, fifo_depths=(8, 4),
+        transforms=[TransformConfig(unroll=2),
+                    TransformConfig(unroll=2, coalesce=True)])
+    assert res.transforms == ("unroll=2", "unroll=2+coalesce")
+    sigs = {x.transform for x in res.candidates}
+    assert {"none", "unroll=2", "unroll=2+coalesce"} <= sigs
+    mem = acp()
+    nt, cyc_mem = _sim_setup(c, 1200)
+    from repro.dataflow.transforms import transform_node_traces
+    for cand in res.front:
+        assert cand.compiled is not None
+        assert cand.compiled.transform_signature == cand.transform
+        eff = cand.tf
+        cnt = nt if eff is None else transform_node_traces(
+            nt, eff, serialized_nodes=cyc_mem)
+        stages = sim_stages_for_partition(cand.compiled.partition, cnt,
+                                          cyc_mem)
+        fresh = simulate_dataflow(stages, mem, cand.n_tokens,
+                                  fifo_depth=cand.fifo_depth,
+                                  use_rescache=False)
+        assert fresh.cycles == cand.cycles
+    assert isinstance(res.transformed_dominates(), bool)
+    assert res.to_json()["transforms"] == ["unroll=2", "unroll=2+coalesce"]
+
+
+def test_explore_spans_memory_models():
+    """One ``explore(mems=[...])`` call evaluates every candidate under
+    several models; fronts are per-model and candidates record theirs."""
+    c = _compiled()
+    res = c.explore(n_iters=800, max_candidates=4,
+                    mems=["ACP", "ACP+64KB"],
+                    transforms=[TransformConfig(unroll=2)])
+    assert res.mem_names == ("ACP", "ACP+64KB")
+    assert {x.mem_name for x in res.candidates} == {"ACP", "ACP+64KB"}
+    assert res.baseline.mem_name == "ACP"  # primary hosts the baseline
+    front_mems = {x.mem_name for x in res.front}
+    assert front_mems == {"ACP", "ACP+64KB"}
+    # per-model sub-fronts are each Pareto in (bits, cycles)
+    for mn in res.mem_names:
+        sub = [x for x in res.front if x.mem_name == mn]
+        bits = [x.fifo_bits for x in sub]
+        cyc = [x.cycles for x in sub]
+        assert bits == sorted(bits)
+        assert cyc == sorted(cyc, reverse=True)
+    # best()/dominates_baseline() never compare across models
+    assert res.best().mem_name == "ACP"
+    # rc.mems expresses the same axis declaratively
+    res2 = c.explore(n_iters=800, max_candidates=4,
+                     constraints=ResourceConstraints(
+                         n_iters=800, mems=("ACP", "ACP+64KB")))
+    assert res2.mem_names == ("ACP", "ACP+64KB")
+
+
+def test_transformed_candidate_dominates_on_gather_kernel(rescache_on):
+    """On the spmv-style gather kernel the unrolled lane strictly
+    dominates the best untransformed point at equal-or-lower FIFO bits —
+    the acceptance property the full-scale harness gates."""
+    c = _compiled()
+    res = c.explore(
+        n_iters=2000, max_candidates=6, fifo_depths=(8, 4),
+        transforms=[TransformConfig(unroll=2),
+                    TransformConfig(unroll=2, coalesce=True)])
+    assert res.transformed_dominates()
