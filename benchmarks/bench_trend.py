@@ -191,6 +191,46 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                 f"{pv:.1f}s -> {cv:.1f}s" if pv and cv else
                 "serving: compared")
 
+    # --- chaos smoke --------------------------------------------------------
+    # resilience is a correctness property: every fault drill must end
+    # bit-identical to a clean library run with exactly one committed
+    # record per chunk — both hard-fail on the current run alone; only
+    # the wall is trend-compared
+    pch, cch = prev.get("chaos"), cur.get("chaos")
+    if cch:
+        if cch.get("identical") is False:
+            bad = [k for k in ("worker_kill", "corrupt_record",
+                               "daemon_restart")
+                   if cch.get(k, {}).get("identical") is False]
+            failures.append(
+                "chaos: fault drill diverged from the clean library "
+                f"run ({', '.join(bad) or 'unknown scenario'}) — "
+                "recovery must be bit-identical")
+        if cch.get("exactly_once") is False:
+            counts = {k: (cch.get(k, {}).get("records"),
+                          cch.get(k, {}).get("expect_records"))
+                      for k in ("worker_kill", "corrupt_record",
+                                "daemon_restart")}
+            failures.append(
+                "chaos: store accounting broke — expected exactly one "
+                f"committed record per chunk, got {counts}")
+        if pch and pch.get("smoke") == cch.get("smoke"):
+            pv, cv = pch.get("wall_s"), cch.get("wall_s")
+            if pv and cv and pv >= WALL_FLOOR_S and cv / pv > WALL_TOL:
+                failures.append(f"chaos wall_s: {pv:.1f} -> {cv:.1f} "
+                                f"({cv / pv:.1f}x)")
+            notes.append(
+                f"chaos: quarantined "
+                f"{pch.get('corrupt_record', {}).get('quarantined')}"
+                f" -> "
+                f"{cch.get('corrupt_record', {}).get('quarantined')}, "
+                f"resumed jobs "
+                f"{pch.get('daemon_restart', {}).get('resumed_jobs')}"
+                f" -> "
+                f"{cch.get('daemon_restart', {}).get('resumed_jobs')}"
+                + (f", wall {pv:.1f}s -> {cv:.1f}s"
+                   if pv and cv else ""))
+
     # --- vectorized-engine throughput --------------------------------------
     # gate on the reference-vs-vectorized *speedup ratio* rather than raw
     # iters/s: both numerator and denominator see the same runner noise,

@@ -25,6 +25,10 @@ in-flight dedup, bit-identical results (see ``docs/serving.md``).
   serving — serving smoke: one daemon, two racing ``sweep --smoke``
             clients; asserts bit-identity with library mode and
             exactly-once resolution (``benchmarks.serving_smoke``)
+  chaos   — fault-injection drills (worker SIGKILL, corrupt record,
+            daemon SIGKILL + journal restart); asserts every scenario
+            ends bit-identical to a clean library run with exactly one
+            committed record per chunk (``benchmarks.chaos_smoke``)
   gc      — garbage-collect the rescache store (``run.py gc
             [--max-bytes N]``: drop pre-v3 orphans, then enforce the
             byte cap — the flag overrides ``$REPRO_RESCACHE_MAX_BYTES``)
@@ -78,6 +82,14 @@ def main() -> None:
         print("=" * 72)
         from . import serving_smoke
         serving_smoke.main()
+
+    if "chaos" in sections:
+        print("\n" + "=" * 72)
+        print("Chaos smoke — fault-injection drills against the "
+              "serving stack")
+        print("=" * 72)
+        from . import chaos_smoke
+        chaos_smoke.main()
 
     if "gc" in sections:
         import argparse

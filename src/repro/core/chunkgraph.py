@@ -46,7 +46,9 @@ caller transparently falls back to the streaming path.
 from __future__ import annotations
 
 import multiprocessing
+import os
 import queue
+import time
 import traceback
 from collections import deque
 from typing import Mapping, Sequence
@@ -113,6 +115,7 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
         import cloudpickle
         p = cloudpickle.loads(payload_bytes)
         from . import rescache as _rc
+        from ..serve import faults as _faults
         from .simulator import _SharedResolver, _lat_itemsize
         _rc.configure(**p["rescache_cfg"])
         _rc.CHUNK_ITERS = p["C"]
@@ -155,6 +158,8 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
                 return
             _, k, lo, hi = msg
             current = k
+            if _faults.active():  # chaos: die mid-chunk
+                _faults.maybe_kill("worker_kill", chunk=k)
             # A: own effects from an empty cache (state-free)
             effects, n_addrs = resolver.chunk_effects(lo, hi)
             result_q.put(("effect", k, effects, n_addrs))
@@ -176,6 +181,8 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
             m = next_msg("draws", k)
             if m is None:
                 return
+            if _faults.active():  # chaos: straggle in the heavy phase
+                _faults.maybe_sleep("straggler", chunk=k)
             for mn, cum in m[2].items():
                 resolver.import_resume(mn, {}, {"draws": cum["base"]})
                 geo = resolver.cache_keys[mn]
@@ -359,6 +366,28 @@ def simulate_dataflow_sharded(
     sent_draws: dict[int, dict] = {}
     retries = 0
 
+    # speculative straggler re-dispatch (the StragglerPolicy
+    # bounded-staleness rule applied to chunk dispatch): a phase-C
+    # chunk whose wall exceeds the SpeculationPolicy threshold is
+    # replayed in full (task + state + draws) on a second live worker.
+    # The master's fold stalls at the straggling chunk while its peers
+    # drain to idle, so the duplicate lands on an idle worker;
+    # resolution is deterministic, so the first "done" wins and the
+    # loser's messages die on the ordinary duplicate guards below.
+    spec_after = float(os.environ.get("REPRO_SPECULATE_AFTER_S",
+                                      "30") or 0)
+    spec_policy = None
+    if W > 1 and spec_after > 0:
+        from ..runtime.fault_tolerance import SpeculationPolicy
+        spec_policy = SpeculationPolicy(min_wait_s=spec_after,
+                                        max_inflight=max(1, W // 2))
+    draws_t: dict[int, float] = {}   # chunk -> phase-C dispatch time
+    spec_owner: dict[int, int] = {}  # chunk -> speculative worker
+    # the idle-poll interval is also the straggler-detection latency:
+    # shrink it when the speculation threshold is below the default
+    poll_s = 5.0 if spec_policy is None else \
+        min(5.0, max(0.25, spec_policy.min_wait_s / 2))
+
     dispatched = first_live
     state_sent = first_live
     draws_sent = first_live
@@ -402,6 +431,7 @@ def simulate_dataflow_sharded(
                     geo_cum[geo] = (h + d[0], m + d[1])
                 sent_draws[k] = msg
                 task_qs[owner(k)].put(("draws", k, msg))
+                draws_t[k] = time.monotonic()
                 del deltas[k]  # fully consumed: keep the master O(W)
                 n_addrs.pop(k, None)
                 effects.pop(k, None)  # duplicate after a retry replay
@@ -429,8 +459,31 @@ def simulate_dataflow_sharded(
                 pump_sends()
                 continue
             try:
-                msg = result_q.get(timeout=5)
+                msg = result_q.get(timeout=poll_s)
             except queue.Empty:
+                if spec_policy is not None:
+                    now = time.monotonic()
+                    for k in sorted(draws_t):
+                        if (k in spec_owner or k in done
+                                or len(spec_owner)
+                                >= spec_policy.max_inflight
+                                or not spec_policy.overdue(
+                                    now - draws_t[k])):
+                            continue
+                        alts = [w for w in range(W)
+                                if w != owner_of.get(k)
+                                and procs[w].is_alive()]
+                        if not alts:
+                            continue
+                        w2 = alts[k % len(alts)]
+                        task_qs[w2].put(
+                            ("task", k, k * C,
+                             min((k + 1) * C, n_iters)))
+                        task_qs[w2].put(("state", k, sent_state[k]))
+                        task_qs[w2].put(("draws", k, sent_draws[k]))
+                        spec_owner[k] = w2
+                        spec_policy.issued += 1
+                        _rc.note_speculation()
                 dead = [w for w, pr in enumerate(procs)
                         if not pr.is_alive()]
                 if not dead:
@@ -439,6 +492,9 @@ def simulate_dataflow_sharded(
                 # the slot and replay its in-flight chunks' messages
                 # verbatim — resolution is deterministic, so the retry
                 # is bit-identical — under a bounded budget
+                for k in [k for k, w in spec_owner.items()
+                          if w in dead]:
+                    spec_owner.pop(k)  # spec copy lost with its worker
                 redo = [k for k in range(solved, dispatched)
                         if k not in done and owner_of.get(k) in dead]
                 retries += len(redo)
@@ -484,6 +540,13 @@ def simulate_dataflow_sharded(
                 if msg[1] >= draws_sent:  # else: retry duplicate
                     deltas[msg[1]] = msg[2]
             elif kind == "done":
+                t0 = draws_t.pop(msg[1], None)
+                if spec_policy is not None:
+                    if msg[1] in spec_owner:
+                        spec_policy.wins += 1  # a duplicate was live
+                    if t0 is not None:
+                        spec_policy.observe(time.monotonic() - t0)
+                spec_owner.pop(msg[1], None)
                 if msg[1] >= solved:
                     done[msg[1]] = (msg[2], msg[3])
                     sent_state.pop(msg[1], None)

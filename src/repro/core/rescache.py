@@ -156,7 +156,18 @@ _stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "stores": 0,
           #: chunk re-dispatches after a pool worker died mid-chunk
           #: (the chunk-graph executor and the resolution daemon both
           #: respawn and retry under a bounded budget)
-          "worker_retries": 0}
+          "worker_retries": 0,
+          #: records failing their blake2b checksum or unreadable as a
+          #: zip — moved aside (``.quarantine``) and re-resolved, never
+          #: served (see ``get_chunk``)
+          "quarantined": 0,
+          #: served runs that lost their daemon mid-stream and fell
+          #: back to library mode, resuming from the committed prefix
+          "serve_failovers": 0,
+          #: speculative duplicate dispatches of straggling chunks
+          #: (first commit wins; the loser is discarded by the
+          #: executors' duplicate guards)
+          "speculated": 0}
 
 
 def configure(*, enabled: bool | None = None, directory: str | None = None,
@@ -201,6 +212,32 @@ def note_worker_retries(n: int = 1) -> None:
     _stats["worker_retries"] += n
 
 
+def note_speculation(n: int = 1) -> None:
+    """Census hook: a pool master issued ``n`` speculative duplicate
+    dispatches for straggling chunks (see
+    :class:`repro.runtime.fault_tolerance.SpeculationPolicy`)."""
+    _stats["speculated"] += n
+
+
+def note_failover(n: int = 1) -> None:
+    """Census hook: a served run lost its daemon (death, socket drop,
+    deadline) mid-stream and completed in library mode from the
+    committed store prefix.  Failovers are part of the contract — the
+    counter keeps them from being *silently* part of it."""
+    _stats["serve_failovers"] += n
+
+
+def _faults():
+    """The armed fault-injection plan's module, or ``None`` — a cheap
+    check (module import is cached; ``active()`` reads one env var
+    once) so production writes pay nothing."""
+    try:
+        from ..serve import faults as _f
+    except ImportError:  # pragma: no cover - serve is part of the tree
+        return None
+    return _f if _f.active() else None
+
+
 def _disk_cap_bytes() -> int:
     return _cfg.max_bytes if _cfg.max_bytes is not None \
         else _cfg.disk_mb * (1 << 20)
@@ -217,7 +254,7 @@ def clear(*, disk: bool = False) -> None:
         d = _dir()
         if d and os.path.isdir(d):
             for f in os.listdir(d):
-                if f.endswith((".npz", ".json")):
+                if f.endswith((".npz", ".json", ".quarantine")):
                     try:
                         os.unlink(os.path.join(d, f))
                     except OSError:
@@ -440,6 +477,45 @@ def _chunk_path(d: str, key: str, idx: int) -> str:
     return os.path.join(d, f"{key}.c{idx:05d}.npz")
 
 
+def _record_digest(n: int, ops: np.ndarray,
+                   hitbits: np.ndarray | None,
+                   hitbits2: np.ndarray | None,
+                   states: dict[str, np.ndarray],
+                   cum: dict[str, int]) -> str:
+    """Content digest of one chunk record — dtype, shape, and bytes of
+    every array plus the counters, so any bit-flip or torn array is
+    detected on read.  Stored inside the npz (``checksum``) since this
+    PR; records without one (older stores) load unverified."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(int(n)).encode())
+    planes = [("ops", ops), ("hitbits", hitbits), ("hitbits2", hitbits2)]
+    planes += [("st_" + k, states[k]) for k in sorted(states)]
+    for name, arr in planes:
+        if arr is None:
+            continue
+        h.update(name.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(repr(sorted(cum.items())).encode())
+    return h.hexdigest()
+
+
+def _quarantine(path: str) -> None:
+    """Move a damaged record aside (``<name>.quarantine``) so the next
+    prefix scan treats the chunk as absent and re-resolves it — the
+    evidence survives for post-mortems, the serving path never sees it
+    again.  :func:`gc` reclaims quarantined files."""
+    _stats["quarantined"] += 1
+    try:
+        os.replace(path, path + ".quarantine")
+    except OSError:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
+
 def _touch_lru(k: tuple[str, int]) -> None:
     _mem.move_to_end(k)
 
@@ -491,11 +567,27 @@ def get_chunk(key: str, idx: int,
                     z["hitbits2"] if "hitbits2" in z.files else None,
                     states,
                     {kk: int(v) for kk, v in zip(cum_keys, cum_vals)})
+                want = str(z["checksum"]) if "checksum" in z.files \
+                    else None
+            if want is not None and want != _record_digest(
+                    rec.n, rec.ops, rec.hitbits, rec.hitbits2,
+                    rec.states, rec.cum):
+                # bit-rot / torn write: never serve it — quarantine and
+                # miss, so the caller re-resolves the chunk cold
+                _stats["disk_errors"] += 1
+                _quarantine(path)
+                _stats["misses"] += 1
+                return None
             os.utime(path)  # LRU recency for the disk evictor
             _stats["disk_hits"] += 1
             _insert_mem(rec)
             return rec
-        except (OSError, KeyError, ValueError, _BadZipFile):
+        except (KeyError, ValueError, _BadZipFile):
+            # structurally damaged (truncated zip, missing arrays):
+            # same treatment as a checksum mismatch
+            _stats["disk_errors"] += 1
+            _quarantine(path)
+        except OSError:
             _stats["disk_errors"] += 1
     _stats["misses"] += 1
     return None
@@ -513,7 +605,10 @@ def chunk_len(key: str, idx: int) -> int | None:
         try:
             with np.load(path) as z:
                 return int(z["n"])
-        except (OSError, KeyError, ValueError, _BadZipFile):
+        except (KeyError, ValueError, _BadZipFile):
+            _stats["disk_errors"] += 1
+            _quarantine(path)  # unreadable ⇒ the prefix ends here
+        except OSError:
             _stats["disk_errors"] += 1
     return None
 
@@ -532,21 +627,34 @@ def put_chunk(rec: ChunkRecord) -> None:
             "n": np.int64(rec.n), "ops": rec.ops,
             "cum_keys": np.array(sorted(rec.cum)),
             "cum_vals": np.array([rec.cum[k] for k in sorted(rec.cum)],
-                                 dtype=np.int64)}
+                                 dtype=np.int64),
+            "checksum": np.array(_record_digest(
+                rec.n, rec.ops, rec.hitbits, rec.hitbits2,
+                rec.states, rec.cum))}
         if rec.hitbits is not None:
             payload["hitbits"] = rec.hitbits
         if rec.hitbits2 is not None:
             payload["hitbits2"] = rec.hitbits2
         for name, arr in rec.states.items():
             payload["st_" + name] = arr
+        final = _chunk_path(d, rec.key, rec.idx)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 np.savez(f, **payload)
-            os.replace(tmp, _chunk_path(d, rec.key, rec.idx))
+                # crash safety: the rename below must never publish a
+                # record whose bytes are still in the page cache only —
+                # a torn record after power loss would cost a checksum
+                # quarantine + re-resolution on the next run
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        fi = _faults()
+        if fi is not None:  # chaos harness: damage the published record
+            fi.maybe_corrupt(final, key=rec.key, chunk=rec.idx)
         # amortized eviction: a full directory scan per stored chunk
         # would be O(chunks × files); sweep once per 1/16th of the cap
         global _evict_accum
@@ -682,7 +790,7 @@ def gc(max_bytes: int | None = None) -> dict[str, int]:
         if _CHUNK_RE.match(f):
             keep.append(path)
             continue
-        if f.endswith((".npz", ".json", ".tmp")):
+        if f.endswith((".npz", ".json", ".tmp", ".quarantine")):
             try:
                 sz = os.path.getsize(path)
                 os.unlink(path)
@@ -719,6 +827,7 @@ def census() -> dict[str, Any]:
     d = _dir()
     keys: set[str] = set()
     chunks = 0
+    quarantine_files = 0
     total = 0
     if d and os.path.isdir(d):
         for f in os.listdir(d):
@@ -729,7 +838,19 @@ def census() -> dict[str, Any]:
                     total += os.path.getsize(os.path.join(d, f))
                 except OSError:
                     pass
+            elif f.endswith(".quarantine"):
+                quarantine_files += 1
+    try:
+        from ..serve import faults as _fa
+        injected = _fa.stats()
+    except ImportError:  # pragma: no cover
+        injected = {}
     return {"dir": d, "artifacts": len(keys), "chunks": chunks,
             "bytes": total, "cold_chunks": _stats["cold_chunks"],
             "served_chunks": _stats["served_chunks"],
-            "worker_retries": _stats["worker_retries"]}
+            "worker_retries": _stats["worker_retries"],
+            "quarantined": _stats["quarantined"],
+            "quarantine_files": quarantine_files,
+            "serve_failovers": _stats["serve_failovers"],
+            "speculated": _stats["speculated"],
+            "faults_injected": injected}

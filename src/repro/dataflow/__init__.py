@@ -36,7 +36,7 @@ from .driver import (Compiled, cache_stats, clear_cache, compile,
                      dataflow_jit)
 from .dse import (DseCandidate, DseResult, enumerate_plans, explore,
                   explore_plans, partition_resources)
-from .options import CompileOptions, ResourceConstraints
+from .options import CompileOptions, ResourceConstraints, ServeOptions
 from .passes import (CompileContext, DecouplePass, DsePass, MemoryDepPass,
                      Pass, PartitionPass, PassPipeline, RewritePass,
                      SchedulePass, TracePass, TransformPass,
@@ -50,7 +50,7 @@ __all__ = [
     "execute_backends", "get_backend", "register_backend",
     "registered_backends", "unregister_backend",
     "Compiled", "cache_stats", "clear_cache", "compile", "dataflow_jit",
-    "CompileOptions", "ResourceConstraints",
+    "CompileOptions", "ResourceConstraints", "ServeOptions",
     "DseCandidate", "DseResult", "enumerate_plans", "explore",
     "explore_plans", "partition_resources",
     "CompileContext", "Pass", "PassPipeline", "TracePass", "MemoryDepPass",

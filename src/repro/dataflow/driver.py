@@ -105,13 +105,27 @@ class Compiled:
 
     # -- analysis -------------------------------------------------------------
 
+    def _serve_defaults(self, kwargs: dict) -> dict:
+        """Apply ``options.serve`` (a
+        :class:`~repro.dataflow.options.ServeOptions`): default the
+        ``server`` argument to its address and install its
+        timeout/backoff knobs as the serve-client configuration.  An
+        explicit ``server=`` argument still wins."""
+        sv = getattr(self.options, "serve", None)
+        if sv is not None:
+            kwargs.setdefault("server", sv.address or "auto")
+            from ..serve import client as _serve_client
+            _serve_client.configure_timeouts(sv.timeouts())
+        return kwargs
+
     def simulate(self, n_iters: int = 2048, **kwargs: Any) -> SimReport:
         """Discrete-event simulation of this program on the template vs the
         fused conventional engine (see
         :func:`repro.dataflow.schedule.simulate_schedule`).  Pass
         ``server="auto"`` (or an address) to pre-resolve traces through a
         running resolution daemon — see ``docs/serving.md``."""
-        return simulate_schedule(self.schedule, n_iters=n_iters, **kwargs)
+        return simulate_schedule(self.schedule, n_iters=n_iters,
+                                 **self._serve_defaults(kwargs))
 
     def sweep(self, **kwargs: Any) -> Any:
         """Design-space sweep: grid the cycle simulator over memory models
@@ -124,7 +138,7 @@ class Compiled:
         delegates resolution to a running resolution daemon instead —
         shared pool, cross-client in-flight dedup, streamed chunks;
         results stay bit-identical (``docs/serving.md``)."""
-        return get_backend("simulate").sweep(self, **kwargs)
+        return get_backend("simulate").sweep(self, **self._serve_defaults(kwargs))
 
     def explore(self, **kwargs: Any) -> Any:
         """Partition-space DSE (see :func:`repro.dataflow.dse.explore`):
@@ -141,7 +155,7 @@ class Compiled:
         ``server="auto"`` to resolve candidate traces through a running
         resolution daemon first (``docs/serving.md``)."""
         from . import dse as _dse
-        return _dse.explore(self, **kwargs)
+        return _dse.explore(self, **self._serve_defaults(kwargs))
 
     @property
     def dse_result(self):

@@ -95,6 +95,43 @@ class ResourceConstraints:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Serving-tier knobs carried on :class:`CompileOptions`.
+
+    When set, ``Compiled.simulate`` / ``sweep`` / ``explore`` default
+    their ``server`` argument to ``address`` (``None`` = the store's
+    canonical socket, i.e. ``server="auto"``) and install the timeout /
+    backoff knobs below as the process's serve-client configuration
+    (:func:`repro.serve.client.configure_timeouts`) before resolving —
+    the compile-options side of the client's
+    :class:`~repro.serve.client.ServeTimeouts`.  ``max_wait_s`` is the
+    cumulative connect + busy-retry budget; ``deadline_s`` (optional)
+    rides each resolve request to the daemon, which fails the request
+    server-side once exceeded (the client then falls back to library
+    mode).  Frozen/hashable, so it participates in the compile cache
+    key like every other option."""
+
+    address: str | None = None
+    connect_timeout_s: float = 10.0
+    request_timeout_s: float = 600.0
+    max_wait_s: float = 60.0
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    deadline_s: float | None = None
+
+    def timeouts(self) -> Any:
+        """The equivalent :class:`repro.serve.client.ServeTimeouts`."""
+        from ..serve.client import ServeTimeouts
+        return ServeTimeouts(
+            connect_timeout_s=self.connect_timeout_s,
+            request_timeout_s=self.request_timeout_s,
+            max_wait_s=self.max_wait_s,
+            backoff_base_s=self.backoff_base_s,
+            backoff_cap_s=self.backoff_cap_s,
+            deadline_s=self.deadline_s)
+
+
+@dataclasses.dataclass(frozen=True)
 class CompileOptions:
     """Everything that parameterizes a :func:`repro.dataflow.compile` run.
 
@@ -134,6 +171,13 @@ class CompileOptions:
         unrolled access groups into burst-width ops, tiling permutes the
         simulated iteration space, reassoc splits multi-region stages.
         Frozen/hashable, so it participates in the compile cache key.
+
+    Serving tier:
+      ``serve`` — a :class:`ServeOptions` block.  When set,
+        ``Compiled.simulate`` / ``sweep`` / ``explore`` resolve through
+        the resolution daemon at ``serve.address`` by default and the
+        client runs with these timeout/backoff knobs
+        (``docs/serving.md``).
     """
 
     policy: str = "paper"
@@ -150,6 +194,7 @@ class CompileOptions:
     stream_argnums: Any = (0,)
     dse: ResourceConstraints | None = None
     transforms: Any = None
+    serve: ServeOptions | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "latency_table", _freeze(self.latency_table))

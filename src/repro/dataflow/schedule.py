@@ -461,7 +461,10 @@ def sweep_schedule(
     ``"auto"`` or an explicit address), falling back to the local
     engines when none answers.  Each row records the engine that
     actually ran in ``resolution_mode`` (``"served:ADDR"`` /
-    ``"sharded:N"`` / ``"streaming"``).
+    ``"sharded:N"`` / ``"streaming"``) and, in ``resilience``, the
+    fault/retry counters its grid pass incurred (worker retries,
+    quarantined store records, serve failovers) — a sweep that silently
+    recovered from faults says so in its own output.
     """
     mems = dict(mems) if mems is not None else standard_memory_models()
     fifo_depths = tuple(fifo_depths)
@@ -509,8 +512,20 @@ def sweep_schedule(
             resolution_mode = "served:" + (
                 addr or _serve_protocol.default_address())
 
+    # resilience observability (chaos-harness satellite): each row
+    # carries the store/serve fault counters its grid pass incurred, so
+    # a sweep that silently survived worker deaths, quarantined records
+    # or daemon failovers says so in the output instead of only in logs
+    from ..core import rescache as _resc
+    _RESIL = ("worker_retries", "quarantined", "serve_failovers")
+
+    def _resil_snap() -> dict[str, int]:
+        s = _resc.stats()
+        return {k: int(s.get(k, 0)) for k in _RESIL}
+
     rows: list[dict] = []
     for mode in scc_modes:
+        resil0 = _resil_snap()
         stages = _with_scc_mode(base_stages, mode)
         variants: dict[str, tuple[str, float | None, int | None]] = {}
         vmems: dict[str, MemoryModel] = {}
@@ -526,6 +541,8 @@ def sweep_schedule(
             freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
             use_rescache=use_rescache, workers=workers,
             depth_incremental=depth_incremental, server=server)
+        resil1 = _resil_snap()
+        resilience = {k: resil1[k] - resil0[k] for k in _RESIL}
         for vn, (mn, wpc, mo) in variants.items():
             cv = conv[mn]
             m = vmems[vn]
@@ -551,6 +568,7 @@ def sweep_schedule(
                     "cache_hits": df.cache_hits,
                     "cache_misses": df.cache_misses,
                     "resolution_mode": resolution_mode,
+                    "resilience": resilience,
                 })
     res = SweepResult(rows, n_iters)
     res.pareto()  # mark the default frontier on the rows

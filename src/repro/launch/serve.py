@@ -167,6 +167,16 @@ def _serve_cli(argv: list[str]) -> int:
     d.add_argument("--throttle", type=float, default=0.0,
                    help="seconds to sleep before each chunk dispatch "
                         "(test/debug knob)")
+    d.add_argument("--no-journal", action="store_true",
+                   help="disable the append-only journal (stats reset "
+                        "on restart; in-flight jobs are not resumed)")
+    d.add_argument("--speculate-after", type=float, default=None,
+                   help="floor seconds before a straggling chunk earns "
+                        "a speculative duplicate dispatch (0 disables; "
+                        "default REPRO_SPECULATE_AFTER_S or 30)")
+    d.add_argument("--speculate-factor", type=float, default=4.0,
+                   help="chunk is a straggler past this multiple of "
+                        "the observed median chunk wall")
     for name in ("stats", "shutdown"):
         sp = sub.add_parser(name)
         sp.add_argument("--socket", default=None)
@@ -180,7 +190,10 @@ def _serve_cli(argv: list[str]) -> int:
             address=args.socket, workers=args.workers,
             max_queued_chunks=args.max_queued_chunks,
             max_client_chunks=args.max_client_chunks,
-            retry_budget=args.retry_budget, throttle_s=args.throttle)
+            retry_budget=args.retry_budget, throttle_s=args.throttle,
+            journal=not args.no_journal,
+            speculate_after_s=args.speculate_after,
+            speculate_factor=args.speculate_factor)
         log.info("resolution daemon at %s (%d workers, store %s)",
                  daemon.address, daemon.workers, daemon.store_dir)
         daemon.serve_forever()

@@ -118,3 +118,53 @@ class StragglerPolicy:
         if item is getattr(source, "_SENTINEL", object()):
             raise StopIteration
         return item
+
+
+@dataclasses.dataclass
+class SpeculationPolicy:
+    """When to speculatively re-dispatch a straggling chunk — the
+    :class:`StragglerPolicy` bounded-staleness rule applied to chunk
+    *dispatch* instead of batch *fetch*: rather than reusing stale
+    data, a chunk whose wall exceeds ``latency_factor ×`` the observed
+    median (floored at ``min_wait_s``) earns a duplicate dispatch on
+    another worker.  Resolution is deterministic, so both copies
+    produce the same bits; the first commit wins and the loser's
+    result is discarded by the master's ordinary duplicate guards —
+    speculation can only ever cost wasted work, never correctness.
+
+    ``max_inflight`` bounds concurrent speculative copies (a cluster of
+    stragglers must not double the cluster).  ``observe`` feeds
+    completed chunk walls; with no samples yet nothing is overdue
+    (there is no baseline to call anything slow against)."""
+
+    min_wait_s: float = 5.0
+    latency_factor: float = 4.0
+    max_inflight: int = 2
+
+    def __post_init__(self):
+        self._walls: list[float] = []
+        self.issued = 0
+        self.wins = 0
+
+    def observe(self, wall_s: float) -> None:
+        self._walls.append(float(wall_s))
+        del self._walls[:-64]
+
+    def median_wall(self) -> float | None:
+        if not self._walls:
+            return None
+        s = sorted(self._walls)
+        return s[len(s) // 2]
+
+    def overdue(self, elapsed_s: float) -> bool:
+        med = self.median_wall()
+        if med is None:
+            return False
+        return elapsed_s > max(self.min_wait_s,
+                               self.latency_factor * med)
+
+    def snapshot(self) -> dict:
+        return {"issued": self.issued, "wins": self.wins,
+                "min_wait_s": self.min_wait_s,
+                "latency_factor": self.latency_factor,
+                "median_wall_s": self.median_wall()}

@@ -24,6 +24,7 @@ pings.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import os
 import subprocess
@@ -32,7 +33,7 @@ import time
 
 import numpy as np
 
-from . import protocol
+from . import faults, protocol
 
 
 class ServeUnavailable(RuntimeError):
@@ -42,10 +43,107 @@ class ServeUnavailable(RuntimeError):
 _REQ_COUNTER = itertools.count()
 
 
-def _request(conn, msg, *, max_wait_s: float = 60.0) -> dict:
+def _env_f(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTimeouts:
+    """Client-side timeout/backoff knobs.
+
+    Resolution order: explicit argument > :func:`configure_timeouts` >
+    ``REPRO_SERVE_*`` environment > defaults.  ``CompileOptions.serve``
+    feeds the same knobs from the compile-options side (the driver
+    converts a :class:`repro.dataflow.options.ServeOptions` into one of
+    these).  ``max_wait_s`` is a **cumulative** budget across connect
+    retries *and* busy-backpressure retries of one request — not
+    per-attempt — so a client's worst-case patience is bounded.
+    ``deadline_s`` (optional) rides the resolve request to the daemon,
+    which fails the request server-side once exceeded (the client then
+    falls back to library mode)."""
+
+    connect_timeout_s: float = 10.0
+    request_timeout_s: float = 600.0
+    max_wait_s: float = 60.0
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    deadline_s: float | None = None
+
+    @classmethod
+    def from_env(cls) -> "ServeTimeouts":
+        dl = _env_f("REPRO_SERVE_DEADLINE_S", 0.0)
+        return cls(
+            connect_timeout_s=_env_f("REPRO_SERVE_CONNECT_TIMEOUT_S",
+                                     cls.connect_timeout_s),
+            request_timeout_s=_env_f("REPRO_SERVE_TIMEOUT_S",
+                                     cls.request_timeout_s),
+            max_wait_s=_env_f("REPRO_SERVE_MAX_WAIT_S", cls.max_wait_s),
+            backoff_base_s=_env_f("REPRO_SERVE_BACKOFF_BASE_S",
+                                  cls.backoff_base_s),
+            backoff_cap_s=_env_f("REPRO_SERVE_BACKOFF_CAP_S",
+                                 cls.backoff_cap_s),
+            deadline_s=dl if dl > 0 else None)
+
+
+_timeouts: ServeTimeouts | None = None
+
+
+def configure_timeouts(timeouts: ServeTimeouts | None = None,
+                       **kw) -> ServeTimeouts:
+    """Install process-wide client timeouts (the driver calls this when
+    ``CompileOptions.serve`` is set; ``None`` + no kwargs resets to the
+    environment).  Returns the effective config."""
+    global _timeouts
+    if timeouts is None and kw:
+        timeouts = dataclasses.replace(ServeTimeouts.from_env(), **kw)
+    _timeouts = timeouts
+    return _timeouts or ServeTimeouts.from_env()
+
+
+def _cfg(timeouts: ServeTimeouts | None) -> ServeTimeouts:
+    return timeouts or _timeouts or ServeTimeouts.from_env()
+
+
+def _backoff(cfg: ServeTimeouts, attempt: int) -> float:
+    """Exponential backoff with deterministic jitter (keyed on pid and
+    attempt — two racing clients desynchronize, one client replays)."""
+    base = min(cfg.backoff_cap_s, cfg.backoff_base_s * (2 ** attempt))
+    j = ((os.getpid() * 2654435761 + attempt * 40503) % 1000) / 1000.0
+    return base * (0.5 + 0.5 * j)
+
+
+def _connect(addr: str, cfg: ServeTimeouts, deadline: float):
+    """Connect with backoff + jitter under the cumulative deadline.
+    Transient refusals (daemon restarting, listen backlog burst) are
+    retried; a hard failure at the deadline raises the last error."""
+    attempt = 0
+    while True:
+        try:
+            conn = protocol.connect(addr, timeout=cfg.connect_timeout_s)
+            conn.settimeout(cfg.request_timeout_s)
+            return conn
+        except OSError as e:
+            delay = _backoff(cfg, attempt)
+            attempt += 1
+            if time.monotonic() + delay >= deadline:
+                raise ServeUnavailable(
+                    f"no daemon at {addr} after {attempt} attempts: "
+                    f"{e}") from e
+            time.sleep(delay)
+
+
+def _request(conn, msg, *, cfg: ServeTimeouts | None = None,
+             deadline: float | None = None) -> dict:
     """Submit one resolve and honor admission control: ``busy`` replies
-    carry a retry-after; give up (→ local fallback) past the cap."""
-    waited = 0.0
+    carry a retry-after; give up (→ local fallback) once the cumulative
+    deadline would be exceeded."""
+    cfg = _cfg(cfg)
+    if deadline is None:
+        deadline = time.monotonic() + cfg.max_wait_s
+    attempt = 0
     while True:
         protocol.send_msg(conn, msg)
         resp = protocol.recv_msg(conn)
@@ -53,12 +151,14 @@ def _request(conn, msg, *, max_wait_s: float = 60.0) -> dict:
         if t == "accepted":
             return resp
         if t == "busy":
-            delay = float(resp.get("retry_after_s", 1.0))
-            if waited + delay > max_wait_s:
+            delay = max(float(resp.get("retry_after_s", 1.0)),
+                        _backoff(cfg, attempt))
+            attempt += 1
+            if time.monotonic() + delay >= deadline:
                 raise ServeUnavailable(
-                    f"daemon busy for {waited:.0f}s (backpressure)")
+                    f"daemon busy past the {cfg.max_wait_s:.0f}s "
+                    f"cumulative wait budget (backpressure)")
             time.sleep(delay)
-            waited += delay
             continue
         raise ServeUnavailable(
             f"daemon rejected request: {resp.get('reason', resp)}")
@@ -69,6 +169,7 @@ def simulate_dataflow_served(
     fifo_depths=(8,), freq_mhz=150.0, seed=0,
     collect_stalls=True, depth_incremental=True,
     address: str | None = None, weight: float = 1.0,
+    timeouts: ServeTimeouts | None = None,
 ):
     """``simulate_dataflow_many`` with resolution delegated to the
     daemon at ``address`` (default: the store's canonical socket)."""
@@ -106,12 +207,10 @@ def simulate_dataflow_served(
         raise ServeUnavailable(f"stages will not serialize: {e}") \
             from e
 
+    cfg = _cfg(timeouts)
+    wait_deadline = time.monotonic() + cfg.max_wait_s
     addr = address or protocol.default_address()
-    try:
-        conn = protocol.connect(addr, timeout=10.0)
-        conn.settimeout(600.0)
-    except OSError as e:
-        raise ServeUnavailable(f"no daemon at {addr}: {e}") from e
+    conn = _connect(addr, cfg, wait_deadline)
     try:
         req = f"{os.getpid()}.{next(_REQ_COUNTER)}"
         resp = _request(conn, {
@@ -119,7 +218,8 @@ def simulate_dataflow_served(
             "keys": {mn: keys[mn] for mn in live}, "mems": live,
             "seed": seed, "n_iters": n_iters, "chunk_iters": C,
             "store_dir": _rc._dir(), "payload": payload,
-            "weight": weight})
+            "weight": weight, "deadline_s": cfg.deadline_s},
+            cfg=cfg, deadline=wait_deadline)
         first_live = int(resp["first_live"])
         n_chunks = -(-n_iters // C)
         live_view = {mn: _ServedOps(keys[mn],
@@ -132,8 +232,14 @@ def simulate_dataflow_served(
         depth_order = sorted(set(fifo_depths), reverse=True)
         pending: dict[int, dict] = {}
 
+        n_recv = itertools.count(1)
+
         def take(idx: int) -> dict:
             while idx not in pending:
+                if faults.active():  # chaos harness: lossy client link
+                    i = next(n_recv)
+                    faults.maybe_sleep("delay_socket", msg=i)
+                    faults.maybe_drop(conn, msg=i)
                 m = protocol.recv_msg(conn)
                 t = m.get("type")
                 if t == "chunk":
@@ -241,6 +347,12 @@ def simulate_dataflow_served(
                 for (mn, d), solver in solvers.items()}
     except (_ServeLost, protocol.ProtocolError, OSError, EOFError,
             KeyError) as e:
+        # mid-stream daemon death / dropped socket / raced eviction:
+        # the caller falls back to library mode and — because every
+        # already-streamed chunk was committed to the store — resumes
+        # from the committed prefix rather than restarting cold.
+        # Count it so fallback is visible, not folklore.
+        _rc.note_failover()
         raise ServeUnavailable(f"serving failed mid-run: {e}") from e
     finally:
         try:
@@ -280,19 +392,17 @@ def prefetch(stages, mems, n_iters, *, seed=0,
     except Exception as e:  # noqa: BLE001
         raise ServeUnavailable(f"stages will not serialize: {e}") \
             from e
+    cfg = _cfg(None)
+    wait_deadline = time.monotonic() + cfg.max_wait_s
     addr = address or protocol.default_address()
-    try:
-        conn = protocol.connect(addr, timeout=10.0)
-        conn.settimeout(600.0)
-    except OSError as e:
-        raise ServeUnavailable(f"no daemon at {addr}: {e}") from e
+    conn = _connect(addr, cfg, wait_deadline)
     try:
         req = f"{os.getpid()}.{next(_REQ_COUNTER)}"
         resp = _request(conn, {
             "type": "resolve", "req": req, "keys": keys, "mems": live,
             "seed": seed, "n_iters": n_iters, "chunk_iters": C,
             "store_dir": _rc._dir(), "payload": payload,
-            "weight": weight})
+            "weight": weight}, cfg=cfg, deadline=wait_deadline)
         while True:
             m = protocol.recv_msg(conn)
             t = m.get("type")
@@ -352,31 +462,73 @@ def shutdown(address: str | None = None) -> bool:
         return False
 
 
+def _clear_stale_socket(addr: str) -> None:
+    """A crashed daemon leaves its AF_UNIX socket file behind; connect
+    then raises ``ECONNREFUSED`` forever.  Since :func:`ping` just said
+    nobody answers, an existing path is stale — unlink it so the daemon
+    we are about to spawn binds cleanly (its own bind would also clear
+    it, but a half-spawned daemon must never unlink a *live* socket,
+    which is why this runs only under the spawn lock)."""
+    if protocol.is_inet(addr):
+        return
+    if os.path.exists(addr):
+        try:
+            os.unlink(addr)
+        except OSError:
+            pass
+
+
 def ensure_daemon(address: str | None = None,
                   workers: int | None = None,
                   wait_s: float = 60.0) -> str:
     """``--server auto``: return a live daemon's address, spawning a
     detached one for this store (inheriting the current rescache
-    configuration and chunk grid) when none answers."""
+    configuration and chunk grid) when none answers.
+
+    The probe-and-spawn sequence holds an ``flock`` on ``<addr>.lock``
+    so two racing clients cannot both observe "no daemon" and spawn
+    two: the loser blocks on the lock, re-pings, and finds the winner's
+    daemon.  Stale socket files from a crashed daemon are unlinked
+    under the same lock."""
+    import fcntl
+    import hashlib
     from ..core import rescache as _rc
     addr = address or protocol.default_address()
     if ping(addr):
         return addr
-    cmd = [sys.executable, "-m", "repro.launch.serve", "daemon",
-           "--socket", addr, "--store-dir", _rc._dir() or ""]
-    if workers is not None:
-        cmd += ["--workers", str(workers)]
-    env = dict(os.environ)
-    env["REPRO_CHUNK_ITERS"] = str(_rc.CHUNK_ITERS)
-    subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
-                     stderr=subprocess.DEVNULL,
-                     start_new_session=True, env=env)
-    deadline = time.monotonic() + wait_s
-    while time.monotonic() < deadline:
-        if ping(addr, timeout=1.0):
+    if protocol.is_inet(addr):
+        lock_path = os.path.join(
+            tempfile_dir(), "repro-serve-"
+            + hashlib.blake2b(addr.encode(), digest_size=8).hexdigest()
+            + ".lock")
+    else:
+        lock_path = addr + ".lock"
+    with open(lock_path, "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        # somebody else may have spawned while we waited for the lock
+        if ping(addr):
             return addr
-        time.sleep(0.2)
+        _clear_stale_socket(addr)
+        cmd = [sys.executable, "-m", "repro.launch.serve", "daemon",
+               "--socket", addr, "--store-dir", _rc._dir() or ""]
+        if workers is not None:
+            cmd += ["--workers", str(workers)]
+        env = dict(os.environ)
+        env["REPRO_CHUNK_ITERS"] = str(_rc.CHUNK_ITERS)
+        subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                         stderr=subprocess.DEVNULL,
+                         start_new_session=True, env=env)
+        deadline = time.monotonic() + wait_s
+        while time.monotonic() < deadline:
+            if ping(addr, timeout=1.0):
+                return addr
+            time.sleep(0.2)
     raise ServeUnavailable(f"spawned daemon at {addr} never answered")
+
+
+def tempfile_dir() -> str:
+    import tempfile
+    return tempfile.gettempdir()
 
 
 class ResolutionClient:

@@ -51,10 +51,16 @@ import queue
 import threading
 import time
 import traceback
+import itertools
 from collections import OrderedDict
 
-from . import protocol
+from . import faults, protocol
+from .journal import Journal
 from .worker import worker_main
+
+#: per-process daemon-instance counter for the pidfile token (two
+#: daemon objects in one process must still conflict on one socket)
+_INSTANCE_IDS = itertools.count(1)
 
 #: Outstanding chunks per worker (matches the chunk-graph executor).
 _WINDOW = 2
@@ -76,9 +82,11 @@ class _Request:
     the walls the stats endpoint reports."""
 
     __slots__ = ("conn", "req", "n_chunks", "n_iters", "names",
-                 "t_admit", "queue_s", "next_notify", "done", "record")
+                 "t_admit", "queue_s", "next_notify", "done", "record",
+                 "deadline")
 
-    def __init__(self, conn, req, n_chunks, n_iters, names):
+    def __init__(self, conn, req, n_chunks, n_iters, names,
+                 deadline_s=None):
         self.conn = conn
         self.req = req
         self.n_chunks = n_chunks
@@ -90,6 +98,11 @@ class _Request:
         self.next_notify = 0  # set to job.first_live at attach
         self.done = False
         self.record: dict | None = None
+        #: absolute monotonic deadline (per-request, layered on WDRR:
+        #: admission is unchanged, but an expired request is failed at
+        #: the next health tick and its client falls back locally)
+        self.deadline = (self.t_admit + deadline_s) \
+            if deadline_s else None
 
 
 class _Job:
@@ -131,6 +144,9 @@ class _Job:
         self.completions = 0  # sched_upto high-water at last retire
         self.failed = False
         self.first_dispatch_t: float | None = None
+        #: journal-resumed orphan: dispatchable with no client attached
+        #: (a restarted daemon finishing what its predecessor promised)
+        self.keep_alive = False
 
     def weight(self, clients) -> float:
         conns = {r.conn for r in self.requests if not r.done}
@@ -152,9 +168,13 @@ class ResolutionDaemon:
                  max_client_chunks: int = 4096,
                  retry_budget: int | None = None,
                  throttle_s: float = 0.0,
-                 inline_history_mb: int = 64):
+                 inline_history_mb: int = 64,
+                 journal: bool = True,
+                 speculate_after_s: float | None = None,
+                 speculate_factor: float = 4.0):
         from ..core import rescache as _rc
         from ..core.chunkgraph import RETRY_BUDGET
+        from ..runtime.fault_tolerance import SpeculationPolicy
         if not _rc.enabled(None) or not _rc._dir():
             raise RuntimeError(
                 "the resolution daemon requires an enabled rescache "
@@ -180,16 +200,65 @@ class ResolutionDaemon:
         self._req_log: list[dict] = []    # last completed requests
         self._jid = 0
         self._t0 = time.monotonic()
+        self._pid_token = f"{os.getpid()}.{next(_INSTANCE_IDS)}"
         self._stats = {"accepted": 0, "rejected": 0, "jobs_completed": 0,
                        "jobs_failed": 0, "cancelled_chunks": 0,
                        "worker_restarts": 0, "chunk_retries": 0,
                        "dedup_store": 0, "dedup_inflight": 0,
-                       "dedup_cold": 0}
+                       "dedup_cold": 0,
+                       "deadline_failures": 0, "resumed_jobs": 0,
+                       "speculative_dispatches": 0,
+                       "speculative_wins": 0}
         self._threads: list[threading.Thread] = []
+        self._journal = Journal(self.store_dir, enabled=journal)
+        self._base: dict[str, int] = {}   # journaled pre-restart totals
+        self._restarts = 0
+        if speculate_after_s is None:
+            try:
+                speculate_after_s = float(
+                    os.environ.get("REPRO_SPECULATE_AFTER_S", "30"))
+            except ValueError:
+                speculate_after_s = 30.0
+        self._spec_policy = None if speculate_after_s <= 0 else \
+            SpeculationPolicy(min_wait_s=speculate_after_s,
+                              latency_factor=speculate_factor,
+                              max_inflight=max(1, self.workers // 2))
 
     # -- lifecycle -----------------------------------------------------------
 
+    def _pidfile(self) -> str | None:
+        return None if protocol.is_inet(self.address) \
+            else self.address + ".pid"
+
+    def _guard_pidfile(self) -> None:
+        """Refuse to start over a *live* daemon on the same socket —
+        binding an AF_UNIX path unlinks whatever is there, so without
+        this check the loser of a spawn race would silently steal the
+        winner's socket.  The pidfile holds a per-instance token (two
+        daemon objects in one process must conflict too); a stale
+        entry (dead pid) is overwritten."""
+        pf = self._pidfile()
+        if pf is None:
+            return
+        try:
+            with open(pf) as f:
+                token = f.read().strip()
+            pid = int(token.split(".", 1)[0] or 0)
+            if token and token != self._pid_token:
+                os.kill(pid, 0)  # raises if the process is gone
+                raise RuntimeError(
+                    f"daemon pid {pid} already serves {self.address} "
+                    f"(pidfile {pf})")
+        except (OSError, ValueError):
+            pass  # no pidfile / unreadable / dead pid: ours to take
+        try:
+            with open(pf, "w") as f:
+                f.write(self._pid_token)
+        except OSError:
+            pass
+
     def start(self) -> None:
+        self._guard_pidfile()
         ctx = multiprocessing.get_context("spawn")
         self._ctx = ctx
         self._result_q = ctx.Queue()
@@ -206,12 +275,73 @@ class ResolutionDaemon:
         self._load = [0] * self.workers
         self._busy_s = [0.0] * self.workers
         self._inflight: dict[tuple[int, int], int] = {}
+        #: chunk -> speculative (second) owner; first commit wins
+        self._spec: dict[tuple[int, int], int] = {}
+        self._dispatch_t: dict[tuple[int, int], float] = {}
+        self._recover_journal()
         self._sock = protocol.listen(self.address)
         self._threads = [
             threading.Thread(target=self._listen_loop, daemon=True),
             threading.Thread(target=self._run, daemon=True)]
         for t in self._threads:
             t.start()
+
+    def _recover_journal(self) -> None:
+        """Load the previous lifetime's state: counter totals, the
+        request log, and — the durability contract — every job that was
+        admitted but never completed, re-created from its journaled
+        payload with its demand restored.  The store prefix says which
+        chunks survived the crash; the remainder resolves with no
+        client attached, so a client that failed over mid-stream finds
+        the full artifact on its next run."""
+        import pickle
+        rep = self._journal.replay()
+        self._base = rep["base_stats"]
+        self._restarts = rep["starts"]
+        self._req_log = list(rep["req_log"])
+        self._jid = rep["max_jid"]
+        self._journal.compact()
+        self._journal.append({"ev": "start", "pid": os.getpid()},
+                             sync=True)
+        for jid, ev in sorted(rep["open_jobs"].items()):
+            payload = self._journal.load_payload(jid)
+            if payload is None:
+                continue
+            try:
+                d = pickle.loads(payload)
+            except Exception:  # noqa: BLE001 — torn payload blob
+                self._journal.drop_payload(jid)
+                continue
+            msg = {"payload": payload, "mems": d["mems"],
+                   "seed": ev.get("seed", d.get("seed", 0)),
+                   "n_iters": ev.get("n_iters", d.get("n_iters", 0))}
+            j = self._new_job(msg, dict(ev["keys"]))
+            # the resumed job gets a fresh jid; close the old journal
+            # entry either way and re-open under the new one if work
+            # remains (committed < demanded)
+            self._journal.append({"ev": "job_done", "jid": jid})
+            self._journal.drop_payload(jid)
+            if j is None:
+                continue
+            n_chunks = int(ev.get("n_chunks", 0))
+            if j.committed >= n_chunks:
+                continue  # store prefix already covers the demand
+            j.sched_upto = n_chunks
+            j.keep_alive = True
+            self._stats["resumed_jobs"] += 1
+            self._journal_job(j)
+
+    def _journal_job(self, j: _Job) -> None:
+        self._journal.save_payload(j.jid, j.payload)
+        self._journal.append(
+            {"ev": "job", "jid": j.jid, "keys": dict(j.keys),
+             "seed": j.seed, "n_iters": j.n_iters_hint,
+             "n_chunks": j.sched_upto}, sync=True)
+
+    def _journal_stats(self) -> None:
+        merged = {k: v + self._base.get(k, 0)
+                  for k, v in self._stats.items()}
+        self._journal.append({"ev": "stats", "stats": merged})
 
     def serve_forever(self) -> None:
         self.start()
@@ -224,6 +354,13 @@ class ResolutionDaemon:
 
     def stop(self) -> None:
         self._stop_evt.set()
+        self._journal_stats()
+        pf = self._pidfile()
+        if pf is not None:
+            try:
+                os.unlink(pf)
+            except OSError:
+                pass
         try:
             self._sock.close()
         except OSError:
@@ -307,6 +444,8 @@ class ResolutionDaemon:
             if now - last_health > 1.0:
                 last_health = now
                 self._check_workers()
+                self._check_deadlines(now)
+                self._check_stragglers(now)
 
     # -- client events -------------------------------------------------------
 
@@ -366,6 +505,14 @@ class ResolutionDaemon:
         if j is None:
             return
         j.requests.remove(r)
+        self._cancel_unneeded(j)
+
+    def _cancel_unneeded(self, j: _Job) -> None:
+        """Cancel never-dispatched chunks no live request needs — except
+        on journal-resumed orphans, whose whole point is finishing with
+        nobody attached."""
+        if j.keep_alive:
+            return
         if not any(not q.done for q in j.requests):
             cancelled = max(0, j.sched_upto - j.next_k)
             if cancelled:
@@ -427,8 +574,16 @@ class ResolutionDaemon:
         self._stats["dedup_store"] += store
         self._stats["dedup_inflight"] += inflight
         self._stats["dedup_cold"] += cold
+        demand_grew = n_chunks > j.sched_upto
         j.sched_upto = max(j.sched_upto, n_chunks)
-        r = _Request(conn, req_id, n_chunks, n_iters, names)
+        if demand_grew and j.sched_upto > j.first_live:
+            # durability point: once accepted, a crash must not lose
+            # the promise — the restarted daemon re-attaches this job
+            # from the journal + store prefix and finishes it
+            self._journal_job(j)
+        dl = msg.get("deadline_s")
+        r = _Request(conn, req_id, n_chunks, n_iters, names,
+                     deadline_s=float(dl) if dl else None)
         r.next_notify = j.first_live
         r.record = {"req": str(req_id), "models": sorted(keys),
                     "chunks": n_chunks, "queue_s": None,
@@ -508,7 +663,8 @@ class ResolutionDaemon:
 
     def _dispatch(self) -> None:
         ready = [j for j in self._jobs.values()
-                 if j.live() and any(not r.done for r in j.requests)]
+                 if j.live() and (j.keep_alive
+                                  or any(not r.done for r in j.requests))]
         if not ready:
             return
         while True:
@@ -537,6 +693,7 @@ class ResolutionDaemon:
             self._task_qs[w].put(("task", j.jid, k, k * self.C,
                                   (k + 1) * self.C))
             self._inflight[(j.jid, k)] = w
+            self._dispatch_t[(j.jid, k)] = time.monotonic()
             self._load[w] += 1
             j.next_k += 1
             now = time.monotonic()
@@ -605,9 +762,13 @@ class ResolutionDaemon:
         self._busy_s[wid] += rest[-1]
         j = self._jobs.get(jid)
         if j is None or j.failed:
-            if kind == "done" and self._inflight.pop((jid, k), None) \
-                    is not None:
-                self._load[wid] = max(0, self._load[wid] - 1)
+            if kind == "done":
+                if wid == self._inflight.get((jid, k)):
+                    self._inflight.pop((jid, k))
+                    self._load[wid] = max(0, self._load[wid] - 1)
+                elif wid == self._spec.get((jid, k)):
+                    self._spec.pop((jid, k))
+                    self._load[wid] = max(0, self._load[wid] - 1)
             return
         if kind == "effect":
             eff, na = rest[0], rest[1]
@@ -627,9 +788,23 @@ class ResolutionDaemon:
                 j.deltas[k] = rest[0]
             self._pump(j)
         elif kind == "done":
-            if self._inflight.pop((j.jid, k), None) is not None:
+            key = (j.jid, k)
+            from_spec = False
+            if wid == self._inflight.get(key):
+                self._inflight.pop(key)
+                self._load[wid] = max(0, self._load[wid] - 1)
+                t0 = self._dispatch_t.pop(key, None)
+                if self._spec_policy is not None and t0 is not None:
+                    self._spec_policy.observe(time.monotonic() - t0)
+            elif wid == self._spec.get(key):
+                from_spec = True
+                self._spec.pop(key)
                 self._load[wid] = max(0, self._load[wid] - 1)
             if k >= j.committed and k not in j.done_buf:
+                if from_spec and self._spec_policy is not None:
+                    # the duplicate beat the straggler to the commit
+                    self._spec_policy.wins += 1
+                    self._stats["speculative_wins"] += 1
                 j.done_buf[k] = (rest[0], rest[1])
                 j.sent_state.pop(k, None)
                 j.sent_draws.pop(k, None)
@@ -661,6 +836,11 @@ class ResolutionDaemon:
                         and k < r.n_chunks:
                     if self._notify(j, r, k):
                         self._finish_if_served(j, r)
+            if faults.active():
+                # chaos: die mid-stream *after* committing chunk N —
+                # the record is on disk, the journal holds the job, and
+                # clients must fail over to the committed prefix
+                faults.maybe_kill("daemon_kill", chunk=j.committed)
         self._maybe_retire(j)
 
     def _notify(self, j: _Job, r: _Request, k: int) -> bool:
@@ -692,6 +872,7 @@ class ResolutionDaemon:
         r.record["resolve_s"] = round(now - r.t_admit, 4)
         self._req_log.append(r.record)
         del self._req_log[:-64]
+        self._journal.append({"ev": "req", "record": dict(r.record)})
         self._send(r.conn, {"type": "done", "req": r.req})
         self._maybe_retire(j)
 
@@ -701,16 +882,24 @@ class ResolutionDaemon:
         identical requests still attach (and can extend it)."""
         if j.failed or j.next_k < j.sched_upto:
             return
-        if any(key[0] == j.jid for key in self._inflight):
+        # completion is a property of the committed range alone — a
+        # speculative loser still straggling in-flight must not delay
+        # the job_done journal entry or the completion counter
+        if j.committed >= j.sched_upto and \
+                j.sched_upto > max(j.first_live, j.completions):
+            j.completions = j.sched_upto
+            j.keep_alive = False
+            self._stats["jobs_completed"] += 1
+            self._journal.append({"ev": "job_done", "jid": j.jid})
+            self._journal.drop_payload(j.jid)
+            self._journal_stats()
+        if any(key[0] == j.jid for key in self._inflight) or \
+                any(key[0] == j.jid for key in self._spec):
             return
         for w, known in enumerate(self._known):
             if j.jid in known:
                 self._task_qs[w].put(("forget", j.jid))
                 known.discard(j.jid)
-        if j.committed >= j.sched_upto and \
-                j.sched_upto > max(j.first_live, j.completions):
-            j.completions = j.sched_upto
-            self._stats["jobs_completed"] += 1
 
     def _fail_request(self, j: _Job, r: _Request, reason: str) -> None:
         r.done = True
@@ -721,12 +910,19 @@ class ResolutionDaemon:
 
     def _fail_job(self, j: _Job, reason: str) -> None:
         j.failed = True
+        j.keep_alive = False
         self._stats["jobs_failed"] += 1
+        self._journal.append({"ev": "job_failed", "jid": j.jid})
+        self._journal.drop_payload(j.jid)
         for r in list(j.requests):
             if not r.done:
                 self._fail_request(j, r, reason)
         for key in [key for key in self._inflight if key[0] == j.jid]:
             w = self._inflight.pop(key)
+            self._dispatch_t.pop(key, None)
+            self._load[w] = max(0, self._load[w] - 1)
+        for key in [key for key in self._spec if key[0] == j.jid]:
+            w = self._spec.pop(key)
             self._load[w] = max(0, self._load[w] - 1)
         for w, known in enumerate(self._known):
             if j.jid in known:
@@ -745,8 +941,21 @@ class ResolutionDaemon:
         if not dead or self._stop_evt.is_set():
             return
         self._stats["worker_restarts"] += len(dead)
-        redo = sorted(key + (w,) for key, w in self._inflight.items()
-                      if w in dead)
+        # a dead speculative copy just disappears (the primary is still
+        # on it); a dead *primary* with a live speculative copy promotes
+        # the copy instead of re-dispatching
+        for key in [key for key, w in self._spec.items() if w in dead]:
+            del self._spec[key]
+        redo = []
+        for key, w in sorted(self._inflight.items()):
+            if w not in dead:
+                continue
+            sw = self._spec.pop(key, None)
+            if sw is not None:
+                self._inflight[key] = sw
+                self._dispatch_t[key] = time.monotonic()
+            else:
+                redo.append(key + (w,))
         self._rc.note_worker_retries(len(redo))
         self._stats["chunk_retries"] += len(redo)
         for w in dead:
@@ -769,6 +978,13 @@ class ResolutionDaemon:
             j = self._jobs.get(jid)
             if j is None or j.failed or jid in over_budget:
                 self._inflight.pop((jid, k), None)
+                self._dispatch_t.pop((jid, k), None)
+                continue
+            if k < j.committed:
+                # a speculative copy already committed this chunk; the
+                # straggler died afterwards — nothing to redo
+                self._inflight.pop((jid, k), None)
+                self._dispatch_t.pop((jid, k), None)
                 continue
             j.retries += 1
             if j.retries > self.retry_budget:
@@ -789,13 +1005,78 @@ class ResolutionDaemon:
             if k < j.draws_sent:
                 self._task_qs[w].put(("draws", jid, k,
                                       j.sent_draws[k]))
+            self._dispatch_t[(jid, k)] = time.monotonic()
             self._load[w] += 1
+
+    def _check_deadlines(self, now: float) -> None:
+        """Fail requests past their deadline (1 Hz).  The request's
+        chunks keep resolving if anyone else — or the journal's
+        keep-alive — still wants them; otherwise the undispatched tail
+        is cancelled, exactly like a client disconnect."""
+        for j in list(self._jobs.values()):
+            expired = [r for r in j.requests
+                       if not r.done and r.deadline is not None
+                       and now > r.deadline]
+            for r in expired:
+                self._stats["deadline_failures"] += 1
+                self._fail_request(
+                    j, r, f"deadline exceeded "
+                          f"({now - r.t_admit:.1f}s elapsed)")
+            if expired:
+                self._cancel_unneeded(j)
+
+    def _check_stragglers(self, now: float) -> None:
+        """Speculative re-dispatch (1 Hz): a chunk whose wall exceeds
+        the policy threshold gets a duplicate dispatch on another
+        worker — task, state, and draws replayed verbatim, which is
+        only possible once all three were sent (a phase-C straggler:
+        the heavy phase).  Both copies compute identical bits; the
+        first ``done`` commits, the loser's is discarded by the
+        ordinary duplicate guards."""
+        pol = self._spec_policy
+        if pol is None:
+            return
+        for key, w in list(self._inflight.items()):
+            if key in self._spec:
+                continue
+            jid, k = key
+            j = self._jobs.get(jid)
+            if j is None or j.failed:
+                continue
+            if k not in j.sent_state or k not in j.sent_draws:
+                continue  # not yet in phase C: nothing to replay
+            t0 = self._dispatch_t.get(key)
+            if t0 is None or not pol.overdue(now - t0):
+                continue
+            if len(self._spec) >= pol.max_inflight:
+                break
+            cands = [i for i in range(self.workers)
+                     if i != w and self._load[i] < _WINDOW
+                     and self._procs[i].is_alive()]
+            if not cands:
+                break
+            w2 = min(cands, key=lambda i: self._load[i])
+            if jid not in self._known[w2]:
+                self._task_qs[w2].put(("job", jid, j.payload))
+                self._known[w2].add(jid)
+            self._task_qs[w2].put(("task", jid, k, k * self.C,
+                                   (k + 1) * self.C))
+            self._task_qs[w2].put(("state", jid, k, k * self.C,
+                                   (k + 1) * self.C, j.sent_state[k]))
+            self._task_qs[w2].put(("draws", jid, k, j.sent_draws[k]))
+            self._spec[key] = w2
+            self._load[w2] += 1
+            pol.issued += 1
+            self._stats["speculative_dispatches"] += 1
 
     # -- observability -------------------------------------------------------
 
     def stats(self) -> dict:
         up = max(1e-9, time.monotonic() - self._t0)
-        s = dict(self._stats)
+        # counters are reported as journal base + current lifetime, so
+        # `serve stats` is monotone across daemon restarts
+        s = {k: v + self._base.get(k, 0)
+             for k, v in self._stats.items()}
         total = s["dedup_store"] + s["dedup_inflight"] + s["dedup_cold"]
         return {
             "address": self.address,
@@ -825,7 +1106,17 @@ class ResolutionDaemon:
                 "worker_restarts": s["worker_restarts"],
                 "chunk_retries": s["chunk_retries"],
                 "jobs_failed": s["jobs_failed"],
-                "cancelled_chunks": s["cancelled_chunks"]},
+                "cancelled_chunks": s["cancelled_chunks"],
+                "deadline_failures": s["deadline_failures"]},
+            "speculation": (dict(self._spec_policy.snapshot(),
+                                 issued=s["speculative_dispatches"],
+                                 wins=s["speculative_wins"])
+                            if self._spec_policy is not None else None),
+            "journal": {
+                "enabled": self._journal.enabled,
+                "restarts": self._restarts,
+                "resumed_jobs": s["resumed_jobs"]},
+            "faults_injected": faults.stats(),
             "jobs_completed": s["jobs_completed"],
             "requests": list(self._req_log),
             "census": self._rc.census(),

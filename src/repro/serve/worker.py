@@ -39,6 +39,8 @@ import traceback
 
 import numpy as np
 
+from . import faults
+
 
 def worker_main(wid: int, C: int, task_q, result_q,
                 rescache_cfg: dict) -> None:
@@ -83,6 +85,9 @@ def worker_main(wid: int, C: int, task_q, result_q,
                     del scratch[sk]
             elif op == "task":
                 _, jid, k, lo, hi = m
+                if faults.active():  # chaos: die / straggle mid-chunk
+                    faults.maybe_kill("worker_kill", worker=wid,
+                                      chunk=k)
                 r = jobs[jid]["resolver"]
                 effects, n_addrs = r.chunk_effects(lo, hi)
                 result_q.put(("effect", wid, jid, k, effects, n_addrs,
@@ -117,6 +122,13 @@ def worker_main(wid: int, C: int, task_q, result_q,
                               time.perf_counter() - t0))
             elif op == "draws":
                 _, jid, k, msg = m
+                if faults.active():
+                    # phase C is the heavy phase (draw materialization
+                    # + record write): a straggler here stalls the
+                    # commit watermark — exactly what the daemon's
+                    # speculative re-dispatch exists to absorb
+                    faults.maybe_sleep("straggler", worker=wid,
+                                       chunk=k)
                 j = jobs[jid]
                 r = j["resolver"]
                 sc = scratch.pop((jid, k))
