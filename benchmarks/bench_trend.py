@@ -138,6 +138,25 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                     f"dse {kn}: transform axis explored "
                     f"({'/'.join(cr['transforms'])}) but no transformed "
                     f"candidate dominates the untransformed front")
+    # hard gate: verifier-prune soundness.  The static deadlock/race
+    # pruning (repro.dataflow.verify) must only discard candidates that
+    # could never be Pareto-optimal — a recorded front point that is
+    # itself pruned, or that sits below its own static deadlock bound,
+    # means the analysis rejected a point the search wanted to keep
+    if cd:
+        for kn, cr in cd.get("kernels", {}).items():
+            for p in cr.get("front", []):
+                if p.get("pruned"):
+                    failures.append(
+                        f"dse {kn}: front point (depth {p.get('fifo_depth')},"
+                        f" {p.get('fifo_bits')} bits) is statically pruned "
+                        f"({p['pruned']}) — verifier pruning is unsound")
+                bound = p.get("deadlock_min_depth")
+                if bound is not None and p.get("fifo_depth", bound) < bound:
+                    failures.append(
+                        f"dse {kn}: front point at fifo depth "
+                        f"{p['fifo_depth']} sits below its static deadlock "
+                        f"bound {bound} — the bound over-approximates")
 
     # --- chunk-graph worker scaling ----------------------------------------
     pw, cw = prev.get("worker_scaling"), cur.get("worker_scaling")

@@ -1,0 +1,118 @@
+"""IR lint: the static dataflow verifier over every shipped kernel.
+
+``run.py lint`` (or ``python -m benchmarks.lint``) compiles each paper
+kernel and each example kernel through the full pass pipeline — with the
+inter-pass verifier on, so a pass that breaks an IR invariant fails the
+compile outright — then runs :meth:`Compiled.verify` for the whole-
+artifact families (channel balance, FIFO deadlock bounds at the
+configuration's depth, decoupled-access races, decouple wiring) and
+prints every finding.  Exit status is nonzero iff any *error*-severity
+diagnostic survives; warnings are printed but don't fail the sweep
+(``docs/verify.md`` has the rule catalog).
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dataflow import compile as dataflow_compile
+
+
+def _example_quickstart():
+    """The quickstart example's kernel: data-dependent gather feeding
+    long-latency fp compute (examples/quickstart.py)."""
+    def kernel(table, idx, w):
+        g = table[idx]
+        h = g * w
+        return jnp.tanh(h) + 1.0
+    table = jnp.arange(1024, dtype=jnp.float32)
+    idx = jnp.asarray([3, 997, 41, 512, 7, 800, 64, 2])
+    w = jnp.float32(1.5)
+    return dataflow_compile(kernel, table, idx, w,
+                            stream_argnums=(1,)), (8,)
+
+
+def _example_spmv():
+    """The SpMV example's CSR inner loop in loop mode
+    (examples/spmv_dataflow.py, HLS view; simulated at depth 32)."""
+    rng = np.random.default_rng(0)
+    dim = 64
+    dense = ((rng.random((dim, dim)) < 0.25)
+             * rng.normal(size=(dim, dim))).astype(np.float32)
+    vals = jnp.asarray(dense[dense != 0])
+    cols = jnp.asarray(np.nonzero(dense)[1].astype(np.int32))
+    x = jnp.asarray(rng.normal(size=dim).astype(np.float32))
+
+    def inner_loop(acc, j):
+        return acc + vals[j] * x[cols[j]]
+
+    return dataflow_compile(inner_loop, jnp.float32(0), jnp.int32(0),
+                            loop=True), (32,)
+
+
+def _paper(kname: str) -> Callable:
+    def make():
+        from .paper_fig5 import FIFO_DEPTH, _make_kernel
+        k = _make_kernel(kname)
+        c = dataflow_compile(
+            k.loop_body, k.carry_example, *k.body_args, loop=True,
+            nonaliasing_carries=getattr(k, "nonaliasing_carries", ()))
+        return c, (FIFO_DEPTH,)
+    return make
+
+
+def targets() -> dict[str, Callable]:
+    """name -> () -> (Compiled, fifo_depths): every shipped kernel."""
+    from .paper_kernels import ALL_KERNELS
+    out: dict[str, Callable] = {
+        f"kernel:{kn}": _paper(kn) for kn in ALL_KERNELS}
+    out["example:quickstart"] = _example_quickstart
+    out["example:spmv_dataflow"] = _example_spmv
+    return out
+
+
+def lint_all(names: tuple[str, ...] = ()) -> int:
+    """Lint every (or the named) target; returns the error count."""
+    from repro.dataflow.verify import VerifyError
+    errors = 0
+    for name, make in sorted(targets().items()):
+        if names and name not in names:
+            continue
+        try:
+            compiled, depths = make()
+        except VerifyError as e:
+            # the inter-pass hook caught a broken invariant mid-compile
+            errors += len(e.diagnostics)
+            print(f"{name}: COMPILE FAILED at pass {e.where!r}")
+            for d in e.diagnostics:
+                print(f"  {d}")
+            continue
+        diags = compiled.verify(fifo_depths=depths)
+        errs = [d for d in diags if d.severity == "error"]
+        warns = [d for d in diags if d.severity == "warning"]
+        errors += len(errs)
+        status = "clean" if not errs else f"{len(errs)} error(s)"
+        if warns:
+            status += f", {len(warns)} warning(s)"
+        print(f"{name}: {status}")
+        for d in errs + warns:
+            print(f"  {d}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    names = tuple(a for a in argv if not a.startswith("-"))
+    errors = lint_all(names)
+    if errors:
+        print(f"\nlint: {errors} error(s)")
+        sys.exit(1)
+    print("\nlint: all targets clean")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import json
 
-import jax
-
 from repro.core import CDFG, decouple, partition_cdfg
 from .paper_kernels import ALL_KERNELS
 

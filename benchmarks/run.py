@@ -29,6 +29,11 @@ in-flight dedup, bit-identical results (see ``docs/serving.md``).
             daemon SIGKILL + journal restart); asserts every scenario
             ends bit-identical to a clean library run with exactly one
             committed record per chunk (``benchmarks.chaos_smoke``)
+  lint    — IR lint: compile every shipped kernel (paper kernels +
+            example kernels) with the static dataflow verifier and
+            report every diagnostic; exits nonzero on error-severity
+            findings (``benchmarks.lint``, rule catalog in
+            ``docs/verify.md``)
   gc      — garbage-collect the rescache store (``run.py gc
             [--max-bytes N]``: drop pre-v3 orphans, then enforce the
             byte cap — the flag overrides ``$REPRO_RESCACHE_MAX_BYTES``)
@@ -104,6 +109,14 @@ def main() -> None:
         print("rescache gc — drop orphans, enforce the byte cap")
         print("=" * 72)
         print(json.dumps(rescache.gc(a.max_bytes), indent=1))
+
+    if "lint" in sections:
+        print("\n" + "=" * 72)
+        print("IR lint — static dataflow verifier over every shipped "
+              "kernel")
+        print("=" * 72)
+        from . import lint
+        lint.main([])  # section names are run.py's, not lint targets
 
     if "table2" in sections:
         print("\n" + "=" * 72)

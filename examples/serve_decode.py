@@ -12,7 +12,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import load_config, reduced

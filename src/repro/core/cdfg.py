@@ -26,11 +26,9 @@ by user annotation — the analogue of the paper's user-guided alias results.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import jax
-import numpy as np
 from jax.extend import core as jex_core
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Sequence
 
-import jax
 from jax.extend import core as jex_core
 
 from .cdfg import CDFG

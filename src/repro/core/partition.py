@@ -42,11 +42,11 @@ Beyond-paper policies (kept separate, selected via ``policy=``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Sequence
+from typing import Any
 
 import networkx as nx
 
-from .cdfg import CDFG, CHEAP_PRIMITIVES, LatencyModel, Node
+from .cdfg import CDFG, CHEAP_PRIMITIVES, LatencyModel
 
 
 @dataclasses.dataclass
@@ -435,8 +435,14 @@ def plan_signature(plan: StagePlan) -> tuple[tuple[int, ...], ...]:
 def plan_is_legal(cdfg: CDFG, plan: StagePlan) -> bool:
     """A plan is legal iff (a) its groups partition the SCC set, (b) no
     SCC is split across groups (structural: groups hold whole SCC ids),
-    and (c) every cross-group dependence edge flows forward — i.e. the
-    group order is a topological order of the condensation."""
+    (c) every cross-group dependence edge flows forward — i.e. the
+    group order is a topological order of the condensation — and
+    (d) channel re-derivation preserves every §III-A memory-ordering
+    token: a ``mem`` edge whose endpoint the plan does not cover would
+    be silently dropped by :func:`derive_channels` (``stage_of_node
+    .get`` skips it), losing the store-ordering guarantee.  This is the
+    one legality oracle the DSE move generation and the static verifier
+    (``repro.dataflow.verify``) share."""
     seen: list[int] = [k for grp in plan.groups for k in grp]
     if sorted(seen) != list(range(len(plan.sccs))):
         return False
@@ -445,9 +451,16 @@ def plan_is_legal(cdfg: CDFG, plan: StagePlan) -> bool:
         for k in grp:
             group_of[k] = gi
     for e in cdfg.edges:
-        a = plan.scc_of_node[e.src]
-        b = plan.scc_of_node[e.dst]
-        if a != b and group_of[a] > group_of[b]:
+        a = plan.scc_of_node.get(e.src)
+        b = plan.scc_of_node.get(e.dst)
+        if a is None or b is None:
+            # uncovered endpoint: fatal for ordering tokens (d); plain
+            # data edges to uncovered nodes never materialize either
+            return False
+        ga, gb = group_of.get(a), group_of.get(b)
+        if ga is None or gb is None:
+            return False
+        if a != b and ga > gb:
             return False
     return True
 

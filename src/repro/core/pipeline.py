@@ -24,13 +24,12 @@ and by the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .channels import ChannelSpec
 from .decouple import DecoupledProgram

@@ -27,6 +27,9 @@ Internals (all public, all swappable):
 * :mod:`~repro.dataflow.transforms` — the HLS transformation catalog
   (tiling, unroll/vectorize, access coalescing, memory-port
   re-association), applied pre-partition and explored by the DSE.
+* :mod:`~repro.dataflow.verify` — the static dataflow verifier:
+  inter-pass IR invariants, the FIFO deadlock analysis, and the
+  decoupled-access race detector (``docs/verify.md``).
 """
 
 from .backends import (Backend, BackendUnavailableError, available_backends,
@@ -44,6 +47,10 @@ from .passes import (CompileContext, DecouplePass, DsePass, MemoryDepPass,
 from .schedule import (Schedule, SimReport, StageSummary, SweepResult,
                        fused_stage, simulate_schedule, sweep_schedule)
 from .transforms import TransformConfig, TransformError
+from .verify import (RULES, Diagnostic, VerifyError, chain_deadlock_bound,
+                     deadlock_min_depth, fifo_depth_diagnostics,
+                     verify_compiled, verify_partition, verify_plan,
+                     verify_program)
 
 __all__ = [
     "Backend", "BackendUnavailableError", "available_backends",
@@ -59,4 +66,7 @@ __all__ = [
     "Schedule", "SimReport", "StageSummary", "SweepResult", "fused_stage",
     "simulate_schedule", "sweep_schedule",
     "TransformConfig", "TransformError",
+    "RULES", "Diagnostic", "VerifyError", "chain_deadlock_bound",
+    "deadlock_min_depth", "fifo_depth_diagnostics", "verify_compiled",
+    "verify_partition", "verify_plan", "verify_program",
 ]

@@ -13,7 +13,6 @@ options is a cache hit returning the *same* ``Compiled`` object.
 
 from __future__ import annotations
 
-import dataclasses
 import inspect
 import logging
 from typing import Any, Callable, Sequence
@@ -175,6 +174,25 @@ class Compiled:
         partitioner, traces attached in pipeline order)."""
         return self.schedule.sim_stages(traces, **kwargs)
 
+    def verify(self, fifo_depths: Sequence[int] | None = None,
+               *, raise_on_error: bool = False) -> list:
+        """Run the static dataflow verifier over this artifact: IR
+        invariants (plan/partition/program), the decoupled-access race
+        detector, and the FIFO deadlock analysis against
+        ``fifo_depths`` (default: the DSE constraints' depth axis, else
+        the simulator default of 8).  Returns the
+        :class:`~repro.dataflow.verify.Diagnostic` list — empty means
+        clean; ``raise_on_error=True`` raises
+        :class:`~repro.dataflow.verify.VerifyError` when any
+        error-severity finding is present (warnings never raise).  The
+        same rules run after every pipeline pass when
+        ``options.verify`` is on — see ``docs/verify.md``."""
+        from . import verify as _verify
+        diags = _verify.verify_compiled(self, fifo_depths)
+        if raise_on_error and any(d.severity == "error" for d in diags):
+            raise _verify.VerifyError(diags, where="verify()")
+        return diags
+
     def report(self) -> str:
         """Per-stage latency / channel summary."""
         sch = self.schedule
@@ -202,6 +220,14 @@ class Compiled:
                 + (f" regions={list(s.regions)}" if s.regions else ""))
         for name, dt in self.context.timings.items():
             lines.append(f"  pass {name:<10} {dt * 1e3:8.2f} ms")
+        diags = self.verify()
+        errs = sum(d.severity == "error" for d in diags)
+        warns = len(diags) - errs
+        lines.append(
+            "  verify: clean" if not diags else
+            f"  verify: {errs} error(s), {warns} warning(s)")
+        for d in diags[:4]:
+            lines.append(f"    {d}")
         return "\n".join(lines)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid

@@ -419,6 +419,13 @@ class DseCandidate:
     mem_name: str = ""
     #: channel tokens simulated (== n_iters unless unrolled)
     n_tokens: int | None = None
+    #: static deadlock bound for this candidate's stage chain (the
+    #: smallest uniform FIFO depth that cannot statically collapse the
+    #: pipeline — ``repro.dataflow.verify.chain_deadlock_bound``);
+    #: depths below it are pruned pre-simulation when verification is
+    #: on, and ``bench_trend`` asserts no front point ever sits below
+    #: its own bound (the analysis soundness guard)
+    deadlock_min_depth: int | None = None
 
     @property
     def fifo_bits(self) -> int:
@@ -434,6 +441,7 @@ class DseCandidate:
             "n_tokens": self.n_tokens,
             "cycles": self.cycles,
             "pruned": self.pruned,
+            "deadlock_min_depth": self.deadlock_min_depth,
             "pareto": self.pareto,
             **{k: self.resources[k]
                for k in ("num_stages", "num_channels", "fifo_bits",
@@ -593,6 +601,7 @@ def explore_plans(
     use_rescache: bool | None = None,
     server: str | None = None,
     transforms: Sequence[Any] | None = None,
+    verify: bool | None = None,
 ) -> DseResult:
     """Enumerate → prune → simulate → Pareto, over ``(plan, duplicate,
     transform, memory model, FIFO depth)`` candidates (no ``Compiled``
@@ -616,11 +625,22 @@ def explore_plans(
     the first — or the explicit ``mem`` — is primary and hosts the
     baseline).  The enumeration budget ``max_candidates`` counts
     *untransformed* (plan, duplicate) pairs; the depth / transform /
-    model grids multiply evaluated points, not the budget."""
+    model grids multiply evaluated points, not the budget.
+
+    ``verify`` (default: on, unless ``REPRO_VERIFY=0``) runs the static
+    dataflow verifier on every candidate partition *before* paying for
+    simulation: depths below the candidate's static deadlock bound are
+    pruned with reason ``"deadlock: ..."``, partitions that dropped an
+    ordering token / race with ``"race: ..."``
+    (``eval_stats["pruned_deadlock"] / ["pruned_race"]`` count them;
+    every candidate records its ``deadlock_min_depth``).  The baseline
+    is still always simulated — it is the comparison point."""
     from ..core import rescache as _rc
+    from . import verify as _vfy
     from .transforms import IDENTITY, TransformConfig, \
         transform_node_traces
     rc = constraints or ResourceConstraints()
+    do_verify = _vfy.enabled(None) if verify is None else bool(verify)
     n_iters = rc.n_iters if n_iters is None else n_iters
     if fifo_depths is None:
         fifo_depths = getattr(rc, "fifo_depths", None)
@@ -711,6 +731,11 @@ def explore_plans(
     t0 = time.perf_counter()
     plans = enumerate_plans(cdfg, base_plan, max_candidates,
                             reassoc=reassoc)
+    # race pruning is only meaningful when §III-A ordering was actually
+    # requested: without mem edges the user asserted non-aliasing and
+    # the verifier downgrades races to warnings
+    has_mem_edges = any(e.kind == "mem" for e in cdfg.edges)
+    pruned_stats = {"pruned_deadlock": 0, "pruned_race": 0}
     candidates: list[DseCandidate] = []
     baseline: DseCandidate | None = None
     #: per mem: (per-depth candidates, stages, token count) per lane
@@ -754,6 +779,21 @@ def explore_plans(
                                         else "no-duplicate",))
                 if tf is not None:
                     tmoves = tmoves + tf.active()
+                # static verification of the candidate, once per
+                # (plan, dup, transform) lane: the deadlock bound of
+                # the simulated stage chain, and any dropped ordering
+                # token / decoupled-access race in the partition
+                bound = _vfy.chain_deadlock_bound(
+                    (s.latency for s in part.stages),
+                    (s.ii for s in part.stages))
+                race_reason: str | None = None
+                if do_verify:
+                    bad = [d for d in _vfy.verify_partition(
+                               part, strict_races=has_mem_edges)
+                           if d.severity == "error"
+                           and d.rule in ("race", "mem-order")]
+                    if bad:
+                        race_reason = f"race: {bad[0].message}"
                 stages: list[SimStage] | None = None
                 for m in mem_list:
                     to_sim: dict[int, DseCandidate] = {}
@@ -763,15 +803,24 @@ def explore_plans(
                             groups=psig, moves=tmoves, duplicate=dup,
                             resources=res, fifo_depth=d, plan=plan,
                             transform=sig, tf=eff, mem_name=m.name,
-                            n_tokens=ntk)
+                            n_tokens=ntk, deadlock_min_depth=bound)
                         is_base = (is_base_pair and tf is None
                                    and m is mem_list[0]
                                    and d == primary_depth)
                         cand.pruned = constraint_violation(res, rc)
+                        if do_verify and cand.pruned is None:
+                            if race_reason is not None:
+                                cand.pruned = race_reason
+                                pruned_stats["pruned_race"] += 1
+                            elif d < bound:
+                                cand.pruned = (
+                                    f"deadlock: fifo depth {d} < "
+                                    f"static bound {bound}")
+                                pruned_stats["pruned_deadlock"] += 1
                         # the baseline is always simulated — it is the
                         # comparison point even when it violates the
-                        # constraints
-                        if cand.pruned is None or is_base:
+                        # constraints (depths < 1 can never simulate)
+                        if (cand.pruned is None or is_base) and d >= 1:
                             to_sim[d] = cand
                         if is_base:
                             baseline = cand
@@ -809,7 +858,8 @@ def explore_plans(
     # shares one fold and warm-starts shallower depths from deeper fixed
     # points.  Transformed lanes run their shorter token streams on the
     # same chunk grid (clamped per lane).
-    eval_stats = {"resolution_groups": 0, "cold_groups": 0}
+    eval_stats = {"resolution_groups": 0, "cold_groups": 0,
+                  **pruned_stats}
     for m in mem_list:
         entries = sim_by_mem[m.name]
         if not entries:
@@ -903,6 +953,7 @@ def explore(
     use_rescache: bool | None = None,
     server: str | None = None,
     transforms: Sequence[Any] | None = None,
+    verify: bool | None = None,
 ) -> DseResult:
     """``Compiled.explore`` implementation: explore re-partitionings of
     ``compiled``'s kernel and return the cycles-vs-FIFO-bits Pareto
@@ -929,7 +980,7 @@ def explore(
         n_iters=n_iters, fifo_depth=fifo_depth,
         fifo_depths=fifo_depths, seed=seed,
         max_candidates=max_candidates, use_rescache=use_rescache,
-        server=server, transforms=transforms)
+        server=server, transforms=transforms, verify=verify)
     artifacts: dict[tuple, Any] = {}
     for cand in {id(c): c for c in result.front + [result.best()]}.values():
         if cand.compiled is None:

@@ -178,6 +178,17 @@ class CompileOptions:
         the resolution daemon at ``serve.address`` by default and the
         client runs with these timeout/backoff knobs
         (``docs/serving.md``).
+
+    Static verification:
+      ``verify`` — run the static dataflow verifier
+        (``repro.dataflow.verify``) after every pipeline pass: IR
+        invariants (SCC integrity, topo order, channel/token balance,
+        §III-A ordering preservation), the FIFO deadlock analysis, and
+        the decoupled-access race detector.  Error-severity findings
+        raise :class:`~repro.dataflow.verify.VerifyError` at the pass
+        that broke the invariant.  On by default; ``REPRO_VERIFY=0``
+        in the environment disables it process-wide (``docs/verify
+        .md``).
     """
 
     policy: str = "paper"
@@ -195,6 +206,7 @@ class CompileOptions:
     dse: ResourceConstraints | None = None
     transforms: Any = None
     serve: ServeOptions | None = None
+    verify: bool = True
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "latency_table", _freeze(self.latency_table))

@@ -51,6 +51,8 @@ class CompileContext:
     schedule: Schedule | None = None
     dse_result: Any = None      # DseResult when the dse pass explored
     timings: dict[str, float] = dataclasses.field(default_factory=dict)
+    #: pass name -> verifier findings recorded by the inter-pass hook
+    diagnostics: dict[str, list] = dataclasses.field(default_factory=dict)
 
 
 class Pass:
@@ -272,10 +274,18 @@ class PassPipeline:
 
     def run(self, ctx: CompileContext, *, start: int = 0,
             stop: int | None = None) -> CompileContext:
+        from . import verify as _verify
+        check = _verify.enabled(ctx.options)
         for p in self.passes[start:stop]:
             t0 = time.perf_counter()
             p.run(ctx)
             ctx.timings[p.name] = time.perf_counter() - t0
+            if check:
+                # inter-pass IR verification: each pass must leave the
+                # invariants it is responsible for intact; an error
+                # here names the pass that broke them instead of
+                # surfacing as a wrong simulation later
+                _verify.verify_ctx(ctx, p.name)
         return ctx
 
     def signature(self) -> tuple:

@@ -9,11 +9,9 @@ head-group plumbing so models never see alignment constraints.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import dataflow_matmul as _mm
 from . import flash_attention as _fa

@@ -8,7 +8,6 @@ jit-wrapped callables plus ShapeDtypeStruct input trees.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -17,7 +16,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import InputShape, ModelConfig, SHAPES
 from ..models import model as M
-from ..models import transformer
 from ..optim import adamw
 from ..optim.schedule import warmup_cosine
 from ..runtime import sharding as shr

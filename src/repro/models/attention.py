@@ -16,8 +16,6 @@ feeding a small amount of compute, decoupled from the projection GEMMs.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

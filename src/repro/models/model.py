@@ -8,9 +8,6 @@ multi-pod dry-run lowers every cell without allocating a byte.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

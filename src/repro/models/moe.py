@@ -17,7 +17,6 @@ re-weights by the router probabilities.
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -13,14 +13,13 @@ sublayer) structure; the per-repeat cache slices ride through the scan as
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from . import attention, layers, moe, ssm
-from ..configs.base import LayerSpec, ModelConfig, Segment
+from ..configs.base import LayerSpec, ModelConfig
 
 
 # ---------------------------------------------------------------------------

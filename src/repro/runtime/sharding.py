@@ -26,7 +26,6 @@ import dataclasses
 from typing import Any, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # v5e hardware constants (also used by the roofline)

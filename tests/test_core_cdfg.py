@@ -1,9 +1,7 @@
 """Unit + property tests for the CDFG front end and Algorithm 1."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st  # noqa: E402 — skips when hypothesis is missing
 
 from repro.core import (CDFG, LatencyModel, partition_cdfg, decouple,

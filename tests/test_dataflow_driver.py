@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dataflow import (Backend, CompileOptions, Pass, PassPipeline,
+from repro.dataflow import (Backend, CompileOptions, Pass,
                             clear_cache, cache_stats, compile as dcompile,
                             dataflow_jit, default_pipeline, execute_backends,
                             get_backend, register_backend,

@@ -10,13 +10,13 @@ import pytest
 
 from repro.core import rescache as rc
 from repro.core.cdfg import CDFG, Node, Edge
-from repro.core.partition import (Partition, derive_channels,
+from repro.core.partition import (derive_channels,
                                   duplicate_cheap_rewrite, fused_plan,
                                   materialize, maximal_plan,
                                   merge_costly_boundaries, merge_move,
-                                  neighbor_plans, partition_cdfg,
+                                  partition_cdfg,
                                   plan_is_legal, plan_signature, split_move,
-                                  stage_groups, _duplicate_cheap_sccs)
+                                  stage_groups)
 from repro.core.simulator import (MemAccess, SimStage, acp, acp_cache,
                                   simulate_dataflow)
 from repro.dataflow import (ResourceConstraints, compile as dcompile,

@@ -27,14 +27,12 @@ import tempfile
 import threading
 import time
 
-import numpy as np
 import pytest
 
 from repro.core import rescache as rc
 from repro.core.simulator import (acp, acp_cache, simulate_dataflow_many)
 from repro.serve import faults
 
-import _serve_client
 from _serve_client import pipeline
 
 

@@ -4,7 +4,6 @@ Tolerances: fp32 kernels accumulate in fp32 but tile order differs from the
 oracle's single contraction, so rtol ~1e-4; bf16 inputs get looser bounds.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

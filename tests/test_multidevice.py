@@ -169,7 +169,6 @@ def test_elastic_resharded_restore(tmp_path):
     NamedShardings — the elastic-scaling path (different mesh than the
     writer's)."""
     import numpy as np
-    import jax
     import jax.numpy as jnp
     from repro.checkpoint import Checkpointer
 

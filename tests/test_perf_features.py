@@ -10,8 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import load_config, reduced
-from repro.models import attention, decode_step, forward, init_cache, \
-    init_params, prefill
+from repro.models import attention, decode_step, init_params, prefill
 from repro.models import moe as moe_mod
 
 

@@ -11,7 +11,7 @@ from _hypothesis_compat import given, settings, st  # noqa: E402 — skips when 
 
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, prefetched, synthetic_stream
-from repro.optim import (AdamWConfig, apply_updates, compress, global_norm,
+from repro.optim import (AdamWConfig, apply_updates, compress,
                          init_opt_state, warmup_cosine)
 
 

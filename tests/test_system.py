@@ -12,7 +12,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,566 @@
+"""Tests for the static dataflow verifier (repro.dataflow.verify).
+
+Three groups:
+
+* **mutation tests** — one per rule id: seed exactly the violation the
+  rule exists to catch (split an SCC, drop a token channel, corrupt a
+  width, duplicate a fed node, ...) and assert the verifier reports it
+  under the right id, with error severity; each has a clean control.
+* **property tests** (hypothesis, skipped without it) — every
+  ``neighbor_plans`` / ``enumerate_plans`` candidate of a real CDFG
+  passes the verifier, and the verifier agrees with ``plan_is_legal``.
+* **the DSE acceptance test** — an exploration over a deliberately
+  undersized ``fifo_depths`` axis statically prunes >0 candidates
+  pre-simulation while the surviving Pareto front is bit-identical to
+  a ``verify=False`` run (the pruning-soundness criterion
+  ``bench_trend`` also gates on recorded artifacts).
+"""
+
+import dataclasses
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.cdfg import CDFG, Edge, Node
+from repro.core.partition import (Channel, derive_channels,
+                                  duplicate_cheap_rewrite, fused_plan,
+                                  materialize, maximal_plan, merge_move,
+                                  neighbor_plans, plan_is_legal,
+                                  stage_groups)
+from repro.dataflow import compile as dcompile
+from repro.dataflow import (CompileOptions, ResourceConstraints,
+                            enumerate_plans, explore_plans)
+from repro.dataflow.verify import (RULES, Diagnostic, VerifyError,
+                                   chain_deadlock_bound,
+                                   deadlock_min_depth, enabled,
+                                   fifo_depth_diagnostics, verify_compiled,
+                                   verify_partition, verify_plan,
+                                   verify_program)
+
+
+def _fake_cdfg(nodes, edges):
+    cdfg = types.SimpleNamespace(nodes=nodes, edges=edges)
+    by_id = {n.id: n for n in nodes}
+    cdfg.node = lambda nid: by_id[nid]
+    return cdfg
+
+
+def _node(nid, prim, *, memory=False, latency=1, region=None,
+          store=False):
+    return Node(id=nid, prim=prim, eqn=None, is_memory=memory,
+                latency=latency, region=region, is_store=store)
+
+
+class _FakeVar:
+    def __init__(self):
+        self.aval = types.SimpleNamespace(shape=(),
+                                          dtype=np.dtype(np.float32))
+
+
+def _chain_cdfg():
+    """gather -> mul -> add, each its own SCC: a 3-stage chain."""
+    v1, v2 = _FakeVar(), _FakeVar()
+    nodes = [_node(0, "gather", memory=True, latency=4, region="t"),
+             _node(1, "mul", latency=2), _node(2, "add")]
+    edges = [Edge(0, 1, v1, "data"), Edge(1, 2, v2, "data")]
+    return _fake_cdfg(nodes, edges)
+
+
+def _rules_of(diags):
+    return {d.rule for d in diags if d.severity == "error"}
+
+
+# ---------------------------------------------------------------------------
+# Mutation tests: one seeded violation per rule id
+# ---------------------------------------------------------------------------
+
+
+def test_clean_chain_verifies_clean():
+    cdfg = _chain_cdfg()
+    plan = stage_groups(cdfg)
+    part = materialize(cdfg, plan)
+    assert verify_plan(cdfg, plan) == []
+    assert [d for d in verify_partition(part)
+            if d.severity == "error"] == []
+
+
+def test_mutation_plan_cover():
+    cdfg = _chain_cdfg()
+    plan = stage_groups(cdfg)
+    bad = dataclasses.replace(plan, groups=plan.groups[:-1])  # drop one
+    assert "plan-cover" in _rules_of(verify_plan(cdfg, bad))
+    assert not plan_is_legal(cdfg, bad)
+
+
+def test_mutation_plan_topo():
+    cdfg = _chain_cdfg()
+    plan = stage_groups(cdfg)
+    bad = dataclasses.replace(plan, groups=list(reversed(plan.groups)))
+    assert "plan-topo" in _rules_of(verify_plan(cdfg, bad))
+    assert not plan_is_legal(cdfg, bad)
+
+
+def test_mutation_scc_integrity():
+    """Split a 2-node SCC across two groups: both the plan- and the
+    partition-level check must name scc-integrity."""
+    v1, v2 = _FakeVar(), _FakeVar()
+    nodes = [_node(0, "add"), _node(1, "mul"), _node(2, "add")]
+    # 0 <-> 1 is an SCC; 2 consumes it
+    edges = [Edge(0, 1, v1, "data"), Edge(1, 0, v1, "carry"),
+             Edge(1, 2, v2, "data")]
+    cdfg = _fake_cdfg(nodes, edges)
+    plan = stage_groups(cdfg)
+    # corrupt the SCC map: claim node 1 belongs to node 2's SCC
+    bad_map = dict(plan.scc_of_node)
+    bad_map[1] = plan.scc_of_node[2]
+    bad = dataclasses.replace(plan, scc_of_node=bad_map)
+    assert "scc-integrity" in _rules_of(verify_plan(cdfg, bad))
+    # partition-level: force one SCC member into a foreign stage
+    part = materialize(cdfg, plan)
+    part.stage_of_node[1] = 999
+    assert "scc-integrity" in _rules_of(verify_partition(part))
+
+
+def test_mutation_chan_missing():
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    assert len(part.channels) == 2
+    part.channels.pop()          # drop a data channel
+    assert "chan-missing" in _rules_of(verify_partition(part))
+    # the dual: a channel with no underlying edge
+    part2 = materialize(cdfg, stage_groups(cdfg))
+    part2.channels.append(Channel(0, 2, _FakeVar(), 4))
+    assert "chan-missing" in _rules_of(verify_partition(part2))
+
+
+def test_mutation_chan_width():
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    part.channels[0] = dataclasses.replace(part.channels[0],
+                                           nbytes=part.channels[0]
+                                           .nbytes * 2)
+    assert "chan-width" in _rules_of(verify_partition(part))
+
+
+def test_mutation_mem_order_dropped_token():
+    """Two same-region memory ops in different stages with a mem edge:
+    removing the token channel is a mem-order error (not chan-missing —
+    the diagnostic must name the §III-A family)."""
+    v1 = _FakeVar()
+    nodes = [_node(0, "scatter", memory=True, latency=2, region="t",
+                   store=True),
+             _node(1, "gather", memory=True, latency=8, region="t")]
+    edges = [Edge(0, 1, v1, "data"), Edge(0, 1, None, "mem")]
+    cdfg = _fake_cdfg(nodes, edges)
+    part = materialize(cdfg, stage_groups(cdfg))
+    toks = [c for c in part.channels if c.kind == "mem"]
+    assert toks, "expected a materialized ordering-token channel"
+    part.channels = [c for c in part.channels if c.kind != "mem"]
+    diags = verify_partition(part)
+    assert "mem-order" in _rules_of(diags)
+
+
+def test_mutation_mem_order_duplicated_feeder():
+    """A §III-B1 replica of a node that has feeder edges drops the
+    feeders' ordering — the verifier re-checks the rewrite's guard."""
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    # node 1 has a feeder (edge 0->1); pretend it was duplicated anyway
+    part.duplicated[1] = [part.stage_of_node[2]]
+    assert "mem-order" in _rules_of(verify_partition(part))
+
+
+def test_mutation_chan_cycle():
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    part.channels.append(Channel(part.stage_of_node[2],
+                                 part.stage_of_node[0], None, 0, "mem"))
+    assert "chan-cycle" in _rules_of(verify_partition(part))
+
+
+def test_mutation_fifo_depth():
+    """A chunky-latency first stage at depth 1 statically deadlocks
+    (error); a depth between the collapse and full-throughput bounds
+    warns."""
+    v1 = _FakeVar()
+    nodes = [_node(0, "gather", memory=True, latency=40, region="t"),
+             _node(1, "add")]
+    cdfg = _fake_cdfg(nodes, [Edge(0, 1, v1, "data")])
+    part = materialize(cdfg, stage_groups(cdfg))
+    dead = deadlock_min_depth(part)
+    assert dead > 1
+    diags = fifo_depth_diagnostics(part, [1, dead, 0])
+    by_loc = {d.loc: d for d in diags}
+    assert by_loc["fifo_depth=1"].severity == "error"
+    assert by_loc["fifo_depth=0"].severity == "error"
+    # at the bound itself: legal, at worst a throughput warning
+    assert all(d.severity != "error" for d in diags
+               if d.loc == f"fifo_depth={dead}")
+    assert all(d.rule == "fifo-depth" for d in diags)
+
+
+def test_mutation_race():
+    """Same-region stores in parallel stages with no ordering path: an
+    error under strict races, a warning when the user opted out of
+    §III-A ordering."""
+    # two independent stores to the same region: no dependence edge, so
+    # no channel path — exactly what add_memory_order_edges would have
+    # serialized
+    nodes = [_node(0, "scatter", memory=True, region="m", store=True),
+             _node(1, "scatter", memory=True, region="m", store=True)]
+    cdfg = _fake_cdfg(nodes, [])
+    part = materialize(cdfg, stage_groups(cdfg))
+    assert part.stage_of_node[0] != part.stage_of_node[1]
+    diags = verify_partition(part, strict_races=True)
+    assert "race" in _rules_of(diags)
+    relaxed = verify_partition(part, strict_races=False)
+    assert "race" not in _rules_of(relaxed)
+    assert any(d.rule == "race" and d.severity == "warning"
+               for d in relaxed)
+    # control: the §III-A ordering token kills the race
+    cdfg2 = _fake_cdfg(nodes, [Edge(0, 1, None, "mem")])
+    part2 = materialize(cdfg2, stage_groups(cdfg2))
+    if part2.stage_of_node[0] != part2.stage_of_node[1]:
+        assert "race" not in _rules_of(
+            verify_partition(part2, strict_races=True))
+    # loads-only pairs always commute
+    loads = [_node(0, "gather", memory=True, region="m"),
+             _node(1, "gather", memory=True, region="m")]
+    cdfg3 = _fake_cdfg(loads, [])
+    part3 = materialize(cdfg3, stage_groups(cdfg3))
+    assert "race" not in _rules_of(
+        verify_partition(part3, strict_races=True))
+
+
+def test_mutation_transform_timing():
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    st0 = part.stages[0]
+    part.stages[0] = dataclasses.replace(st0, latency=st0.latency + 7)
+    assert "transform" in _rules_of(verify_partition(part))
+
+
+def test_mutation_decouple():
+    def fn(table, idx, w):
+        return jnp.tanh(table[idx] * w) + 1.0
+
+    c = dcompile(fn, jnp.arange(8, dtype=jnp.float32), jnp.int32(1),
+                 jnp.float32(2.0))
+    prog = c.program
+    assert verify_program(prog) == []
+    bad = dataclasses.replace(
+        prog, producer_stage={**prog.producer_stage,
+                              "ghost-var": 10_000})
+    assert "decouple" in _rules_of(verify_program(bad))
+    # stage-count mismatch
+    bad2 = dataclasses.replace(prog, stages=prog.stages[:-1])
+    assert "decouple" in _rules_of(verify_program(bad2))
+
+
+def test_every_rule_id_has_a_mutation_test():
+    """The catalog and this module stay in sync: every id in RULES is
+    asserted somewhere above."""
+    import pathlib
+    src = pathlib.Path(__file__).read_text()
+    for rule in RULES:
+        assert f'"{rule}"' in src, f"no mutation coverage for {rule!r}"
+
+
+# ---------------------------------------------------------------------------
+# Pipeline hook + surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_hook_names_offending_pass():
+    """A pass that corrupts the partition is caught by the inter-pass
+    hook, which names it."""
+    from repro.dataflow.passes import Pass, default_pipeline
+
+    class CorruptPass(Pass):
+        name = "corrupt"
+
+        def run(self, ctx):
+            ctx.partition.channels.pop()
+
+    def fn(table, idx, w):
+        return jnp.tanh(table[idx] * w) + 1.0
+
+    pipe = default_pipeline().insert_after("rewrite", CorruptPass())
+    with pytest.raises(VerifyError) as ei:
+        dcompile(fn, jnp.arange(8, dtype=jnp.float32), jnp.int32(1),
+                 jnp.float32(2.0), pipeline=pipe, use_cache=False)
+    assert ei.value.where == "corrupt"
+    assert any(d.rule in ("chan-missing", "mem-order")
+               for d in ei.value.diagnostics)
+    # verify=False compiles straight through the same corruption
+    c = dcompile(fn, jnp.arange(8, dtype=jnp.float32), jnp.int32(1),
+                 jnp.float32(2.0), pipeline=pipe, use_cache=False,
+                 options=CompileOptions(verify=False))
+    assert c.program is not None
+
+
+def test_env_escape_hatch(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    assert not enabled(CompileOptions(verify=True))
+    monkeypatch.delenv("REPRO_VERIFY")
+    assert enabled(CompileOptions(verify=True))
+    assert not enabled(CompileOptions(verify=False))
+    assert enabled(None)
+
+
+def test_compiled_verify_and_report():
+    def fn(table, idx, w):
+        return jnp.tanh(table[idx] * w) + 1.0
+
+    c = dcompile(fn, jnp.arange(8, dtype=jnp.float32), jnp.int32(1),
+                 jnp.float32(2.0))
+    diags = c.verify()
+    assert all(isinstance(d, Diagnostic) for d in diags)
+    assert not [d for d in diags if d.severity == "error"]
+    assert "verify:" in c.report()
+    # an undersized depth axis surfaces as fifo-depth errors + raise
+    bad = c.verify(fifo_depths=[0])
+    assert "fifo-depth" in _rules_of(bad)
+    with pytest.raises(VerifyError):
+        c.verify(fifo_depths=[0], raise_on_error=True)
+    assert verify_compiled(c) == c.verify()
+
+
+# ---------------------------------------------------------------------------
+# Deadlock bounds
+# ---------------------------------------------------------------------------
+
+
+def test_chain_bound_matches_simulator_floor():
+    """Below the chain bound, the simulated machine is no faster than
+    serialized execution; at the bound it strictly beats it (the bound
+    is tight on this chain)."""
+    from repro.core.simulator import MemAccess, SimStage, acp, \
+        simulate_dataflow
+
+    n = 256
+    tr = MemAccess("t", np.arange(n) * 4)
+    lats, iis = [40, 1], [1, 1]
+    stages = [SimStage("s0", 1, 40, [tr], False),
+              SimStage("s1", 1, 1, [], False)]
+    bound = chain_deadlock_bound(lats, iis)
+    assert bound > 1
+    serial = sum(iis)
+
+    def cyc_per_iter(depth):
+        r = simulate_dataflow(stages, acp(), n, fifo_depth=depth, seed=0)
+        return r.cycles / n
+
+    # depths below the bound cannot beat back-to-back execution...
+    assert cyc_per_iter(bound - 1) >= serial
+    # ...while the bound itself restores pipelining over depth 1
+    assert cyc_per_iter(bound) < cyc_per_iter(1)
+
+
+def test_chain_bound_edge_cases():
+    assert chain_deadlock_bound([], []) == 1
+    assert chain_deadlock_bound([100], [1]) == 1     # single stage
+    assert chain_deadlock_bound([1, 1], [1, 1]) == 1  # cheap chain
+    # final-stage latency never binds (nothing downstream backpressures)
+    assert chain_deadlock_bound([1, 100], [1, 1]) == 1
+
+
+def test_deadlock_min_depth_matches_chain_on_chains():
+    cdfg = _chain_cdfg()
+    part = materialize(cdfg, stage_groups(cdfg))
+    lats = [s.latency for s in part.stages]
+    iis = [s.ii for s in part.stages]
+    assert deadlock_min_depth(part) == chain_deadlock_bound(lats, iis)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: the move set stays inside the verified space
+# ---------------------------------------------------------------------------
+
+
+def _real_cdfg():
+    def body(acc, j, vals, cols, xv):
+        return acc + vals[j] * xv[cols[j]]
+
+    vals = jnp.arange(64, dtype=jnp.float32)
+    cols = jnp.arange(64) % 16
+    xv = jnp.arange(16, dtype=jnp.float32)
+    return CDFG.from_function(body, jnp.float32(0.0), jnp.int32(0),
+                              vals, cols, xv)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_neighbor_plans_verify_clean(data):
+    """Any random walk through neighbor_plans stays verifier-clean:
+    merge/split moves can never break cover, SCC integrity, or the topo
+    order — and the materialized partitions re-derive cleanly."""
+    cdfg = _real_cdfg()
+    plan = stage_groups(cdfg)
+    for _ in range(data.draw(st.integers(min_value=1, max_value=4))):
+        nbrs = neighbor_plans(plan)
+        if not nbrs:
+            break
+        _, plan = data.draw(st.sampled_from(nbrs))
+        assert plan_is_legal(cdfg, plan)
+        assert verify_plan(cdfg, plan) == []
+    part = materialize(cdfg, plan)
+    duplicate_cheap_rewrite(part)
+    assert not _rules_of(verify_partition(part))
+
+
+def test_enumerated_candidates_verify_clean():
+    """Deterministic version of the property: every enumerate_plans
+    candidate (the DSE's actual move lane) is legal and verifier-clean,
+    and the verifier agrees with plan_is_legal on seeded illegals."""
+    cdfg = _real_cdfg()
+    base = stage_groups(cdfg)
+    cands = enumerate_plans(cdfg, base, 32)
+    assert len(cands) > 2
+    for _, plan in cands:
+        assert plan_is_legal(cdfg, plan)
+        assert verify_plan(cdfg, plan) == []
+        part = materialize(cdfg, plan)
+        assert not _rules_of(verify_partition(part))
+    for plan in (fused_plan(base), maximal_plan(base)):
+        assert plan_is_legal(cdfg, plan)
+        assert verify_plan(cdfg, plan) == []
+    # verifier <-> legality-oracle agreement on a seeded illegal
+    bad = dataclasses.replace(base, groups=list(reversed(base.groups)))
+    if len(base.groups) > 1:
+        assert not plan_is_legal(cdfg, bad)
+        assert _rules_of(verify_plan(cdfg, bad))
+
+
+def test_plan_is_legal_rejects_uncovered_mem_edge():
+    """Satellite 1: a plan that does not cover a mem edge's endpoint
+    would silently drop the ordering token in derive_channels — the
+    legality oracle must reject it (it used to KeyError or pass)."""
+    v1 = _FakeVar()
+    nodes = [_node(0, "scatter", memory=True, region="t", store=True),
+             _node(1, "gather", memory=True, region="t")]
+    edges = [Edge(0, 1, v1, "data"), Edge(0, 1, None, "mem")]
+    cdfg = _fake_cdfg(nodes, edges)
+    plan = stage_groups(cdfg)
+    # a plan built for a smaller CDFG: node 1 unmapped
+    stale = dataclasses.replace(
+        plan,
+        scc_of_node={k: v for k, v in plan.scc_of_node.items()
+                     if k != 1})
+    assert not plan_is_legal(cdfg, stale)
+    assert "mem-order" in _rules_of(verify_plan(cdfg, stale))
+    # and the verifier agrees with the oracle on the clean plan
+    assert plan_is_legal(cdfg, plan)
+    assert verify_plan(cdfg, plan) == []
+
+
+# ---------------------------------------------------------------------------
+# DSE acceptance: pruning wins wall time, never moves the front
+# ---------------------------------------------------------------------------
+
+
+def test_dse_prunes_deadlocking_depths_front_identical():
+    """The acceptance criterion: with a deliberately undersized depth
+    axis, verification prunes >0 (plan, depth) candidates before
+    simulation, and the surviving Pareto front is bit-identical to the
+    unpruned (verify=False) exploration."""
+    def body(acc, j, vals, cols, xv):
+        return acc + vals[j] * xv[cols[j]]
+
+    vals = jnp.arange(64, dtype=jnp.float32)
+    cols = jnp.arange(64) % 16
+    xv = jnp.arange(16, dtype=jnp.float32)
+    # chunky gather latency makes the collapse bound land inside the
+    # explored depth axis
+    c = dcompile(body, jnp.float32(0.0), jnp.int32(0), vals, cols, xv,
+                 latency_table={"gather": 48}, long_threshold=4,
+                 use_cache=False)
+    kw = dict(n_iters=64, fifo_depths=[1, 2, 16],
+              constraints=ResourceConstraints(max_candidates=6))
+    r_on = c.explore(verify=True, **kw)
+    r_off = c.explore(verify=False, **kw)
+
+    assert r_on.eval_stats["pruned_deadlock"] > 0
+    assert any("deadlock" in (cand.pruned or "")
+               for cand in r_on.candidates)
+    # every pruned candidate carries its bound, and sits below it
+    for cand in r_on.candidates:
+        if cand.pruned and cand.pruned.startswith("deadlock"):
+            assert cand.fifo_depth < cand.deadlock_min_depth
+    # pruned candidates were never simulated (the wall win; the
+    # baseline is the one exception — it is always the comparison
+    # point)
+    assert all(cand.cycles is None for cand in r_on.candidates
+               if cand.pruned and cand is not r_on.baseline)
+    assert len(r_on.evaluated()) < len(r_off.evaluated())
+
+    def key(front):
+        return [(cand.groups, cand.duplicate, cand.transform,
+                 cand.mem_name, cand.fifo_depth, cand.cycles,
+                 cand.fifo_bits) for cand in front]
+
+    assert key(r_on.front) == key(r_off.front)
+    assert r_on.best().cycles == r_off.best().cycles
+    # counters ride into the recorded artifact
+    j = r_on.to_json()
+    assert j["pruned_deadlock"] == r_on.eval_stats["pruned_deadlock"]
+    assert j["front"][0]["deadlock_min_depth"] is not None
+
+
+def test_dse_race_prune_requires_mem_edges():
+    """Race pruning only fires when the CDFG carries §III-A mem edges;
+    compiling with add_memory_edges=False must not prune (the user
+    asserted non-aliasing)."""
+    def body(acc, j, vals, cols, xv):
+        return acc + vals[j] * xv[cols[j]]
+
+    vals = jnp.arange(64, dtype=jnp.float32)
+    cols = jnp.arange(64) % 16
+    xv = jnp.arange(16, dtype=jnp.float32)
+    c = dcompile(body, jnp.float32(0.0), jnp.int32(0), vals, cols, xv,
+                 add_memory_edges=False, use_cache=False)
+    r = c.explore(n_iters=32, verify=True,
+                  constraints=ResourceConstraints(max_candidates=4))
+    assert r.eval_stats["pruned_race"] == 0
+
+
+def test_bench_trend_gates_pruned_front_points():
+    """Satellite 2: the trend gate hard-fails a recorded front point
+    that is pruned or sits below its own deadlock bound."""
+    from benchmarks.bench_trend import compare
+
+    def payload(point):
+        return {"dse": {"smoke": True, "kernels": {"k": {
+            "front": [point]}}}}
+
+    ok = payload({"fifo_depth": 8, "deadlock_min_depth": 2,
+                  "pruned": None, "fifo_bits": 64})
+    fails, _ = compare({}, ok)
+    assert not [f for f in fails if "dse k" in f]
+    bad1 = payload({"fifo_depth": 8, "deadlock_min_depth": 2,
+                    "pruned": "deadlock: ...", "fifo_bits": 64})
+    fails, _ = compare({}, bad1)
+    assert any("statically pruned" in f for f in fails)
+    bad2 = payload({"fifo_depth": 1, "deadlock_min_depth": 5,
+                    "pruned": None, "fifo_bits": 64})
+    fails, _ = compare({}, bad2)
+    assert any("below its static deadlock bound" in f for f in fails)
+
+
+def test_merge_move_keeps_verifier_clean_after_dup():
+    """Regression guard for the §III-B1 interaction: merging stages
+    after duplication re-materializes cleanly under the verifier."""
+    cdfg = _real_cdfg()
+    plan = stage_groups(cdfg)
+    if len(plan.groups) < 2:
+        pytest.skip("needs a multi-stage plan")
+    merged = merge_move(plan, 0)
+    part = materialize(cdfg, merged)
+    duplicate_cheap_rewrite(part)
+    assert not _rules_of(verify_partition(part))
+    assert {(ch.src_stage, ch.dst_stage, ch.var) for ch in part.channels} \
+        == {(ch.src_stage, ch.dst_stage, ch.var)
+            for ch in derive_channels(part)}
