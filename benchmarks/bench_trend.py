@@ -166,6 +166,20 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
                 "worker_scaling: sharded and streaming runs disagree "
                 "on cycle counts — the chunk-graph executor must be "
                 "bit-identical")
+        # hard floor on the current run alone: the fused effect+replay
+        # executor must hold its scaling.  ≥2 cores overlap the master's
+        # fold/solve with the workers' replay, so break-even (0.9x) is
+        # the bar; a 1-cpu container serializes master + workers + IPC
+        # and 0.25x is the calibrated floor (measured 0.30-0.40x across
+        # runs — the unfused executor's double replay scored 0.16x; see
+        # docs/engine.md for the profile)
+        cs = cw.get("speedup")
+        floor = 0.9 if (cw.get("cpus") or 1) >= 2 else 0.25
+        if cs and cs < floor:
+            failures.append(
+                f"worker_scaling: speedup {cs:.2f}x on "
+                f"{cw.get('cpus')} cpu(s) fell below the {floor:.1f}x "
+                f"floor — the fused effect+replay path regressed")
         if pw and pw.get("n_iters") == cw.get("n_iters"):
             p1, c1 = pw.get("workers1_s"), cw.get("workers1_s")
             # same short-wall floor as every other gate here: runner
@@ -178,6 +192,35 @@ def compare(prev: dict, cur: dict) -> tuple[list[str], list[str]]:
             if ps and cs and pw.get("cpus") == cw.get("cpus"):
                 notes.append(f"worker scaling on {cw.get('cpus')} cpus: "
                              f"{ps:.2f}x -> {cs:.2f}x")
+
+    # --- resolution-engine A/B ---------------------------------------------
+    # jax-vs-numpy cycle identity is a correctness property of the
+    # engine abstraction (hard fail on the current run alone); the
+    # per-backend walls and phase walls are trend-compared with the
+    # usual noise tolerances
+    pe, ce = prev.get("engine"), cur.get("engine")
+    if ce:
+        if ce.get("identical") is False:
+            cyc = {b: ce.get(b, {}).get("cycles")
+                   for b in ("numpy", "jax") if ce.get(b)}
+            failures.append(
+                f"engine: backends disagree on cycle counts ({cyc}) — "
+                "the resolution engine must be bit-identical across "
+                "numpy and jax")
+        if pe and pe.get("n_iters") == ce.get("n_iters"):
+            for b in ("numpy", "jax"):
+                pv = pe.get(b, {}).get("wall_s")
+                cv = ce.get(b, {}).get("wall_s")
+                if pv and cv and pv >= WALL_FLOOR_S \
+                        and cv / pv > WALL_TOL:
+                    failures.append(
+                        f"engine {b} wall_s: {pv:.1f} -> {cv:.1f} "
+                        f"({cv / pv:.1f}x)")
+            pj = pe.get("nway_replay", {}).get("jax_speedup")
+            cj = ce.get("nway_replay", {}).get("jax_speedup")
+            if pj and cj:
+                notes.append(f"engine nway replay jax-vs-numpy: "
+                             f"{pj:.2f}x -> {cj:.2f}x")
 
     # --- serving smoke ------------------------------------------------------
     # same posture as worker_scaling: the daemon is scheduling-only, so

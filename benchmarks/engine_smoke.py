@@ -1,0 +1,188 @@
+"""Resolution-engine A/B smoke (``run.py engine``).
+
+Runs the same full-Table-I-scale resolution twice — once per engine
+backend (``numpy`` / ``jax``) — asserts the cycle counts are
+bit-identical, and times the two hot resolution kernels the engine
+ports (the wavefront solver's running max and the N-way LRU cache
+replay) head to head at the same scale.  The result lands in
+``BENCH_sim.json`` under ``engine``:
+
+* ``identical`` — jax-vs-numpy cycle identity (``bench_trend.py``
+  hard-fails on ``False``);
+* per-backend wall and per-phase walls (effect / replay / fold /
+  solve) for the end-to-end run;
+* ``running_max`` — scalar ``np.maximum.accumulate`` vs the blocked
+  dominated-bound form vs jitted ``lax.cummax`` on the solver's
+  trending-down finish-time shape;
+* ``nway_replay`` — the numpy segmented-scan replay vs the jitted JAX
+  scan on one cached-geometry trace.
+
+On a machine with an accelerator backend the jax columns are the
+headline; on the CPU-only container the blocked numpy form is the one
+that moves (see ``docs/engine.md`` for why XLA:CPU loses the dispatch
+race at this arithmetic intensity).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine as _eng
+from repro.core.simulator import (MemAccess, SimStage,
+                                  simulate_dataflow_many,
+                                  standard_memory_models)
+
+from .sweep import BENCH_PATH, update_bench
+
+#: Table-I spmv iteration count — the full-scale reference workload.
+N_FULL = 4_194_304
+
+
+def _pipeline(n: int) -> list[SimStage]:
+    rng = np.random.default_rng(0)
+    return [
+        SimStage("addr", ii=1, latency=2,
+                 accesses=[MemAccess("idx", np.arange(n) * 4)]),
+        SimStage("fetch", ii=1, latency=2,
+                 accesses=[MemAccess("x", rng.integers(0, 4 << 20, n) * 4),
+                           MemAccess("w", rng.integers(0, 4 << 20, n) * 4)]),
+        SimStage("fma", ii=6, latency=8),
+        SimStage("store", ii=1, latency=2,
+                 accesses=[MemAccess("y", np.arange(n) * 4,
+                                     is_store=True)]),
+    ]
+
+
+def _bench_running_max(captured: list[np.ndarray]) -> dict:
+    """The wavefront solver's running-max sweep on the *actual* arrays
+    the full-scale solve produced (captured during the numpy backend
+    run), three ways: the pre-engine scalar accumulate, the blocked
+    dominated-bound form the numpy backend now uses, and the jitted
+    ``lax.cummax``.  Best-of-3 per variant."""
+    out: dict = {"arrays": len(captured),
+                 "elems": int(sum(a.shape[0] for a in captured))}
+    if not captured:
+        return out
+    B = _eng._RMAX_BLOCK
+    blocks = needed = 0
+    for a in captured:
+        nb = a.shape[0] // B
+        if nb < 2:
+            continue
+        M = a[: nb * B].reshape(nb, B).max(axis=1)
+        C = np.maximum.accumulate(M)
+        blocks += nb
+        needed += 1 + int(np.count_nonzero(M[1:] > C[:-1]))
+    out["dominated_frac"] = 1 - needed / max(1, blocks)
+    want = [np.maximum.accumulate(a) for a in captured]
+
+    def best_of(f, reps: int = 3) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            got = [f(a.copy()) for a in captured]
+            best = min(best, time.perf_counter() - t0)
+        for g, w in zip(got, want):
+            assert np.array_equal(np.asarray(g), w)
+        return best
+
+    def scalar(a):
+        np.maximum.accumulate(a, out=a)
+        return a
+
+    out["scalar_s"] = best_of(scalar)
+    out["blocked_s"] = best_of(_eng._running_max_np)
+    out["blocked_speedup"] = out["scalar_s"] / max(1e-9, out["blocked_s"])
+    if _eng.jax_modules():
+        with _eng.use("jax"):
+            _eng.running_max(captured[0].copy())  # pay the jit compile
+            out["jax_s"] = best_of(_eng.running_max)
+        out["jax_speedup_vs_scalar"] = \
+            out["scalar_s"] / max(1e-9, out["jax_s"])
+    return out
+
+
+def _bench_nway_replay(n: int, ways: int = 8) -> dict:
+    """One cached geometry's chunk replay (the ``_lookup_nway``
+    segmented scan) numpy vs jax, identical hit flags asserted.
+    Benchmarked at ``ways > 2``: the 2-way geometries take the
+    closed-form ``_lookup2`` path that never reaches the scan."""
+    from repro.core.simulator import BatchedCacheSim, CacheConfig
+    cfg = CacheConfig(size_bytes=64 << 10, line_bytes=32, ways=ways)
+    rng = np.random.default_rng(2)
+    addrs = rng.integers(0, 4 << 20, n) * 4
+    out: dict = {"n": n, "ways": ways}
+    sim = BatchedCacheSim(cfg)
+    t0 = time.perf_counter()
+    h_np = sim.lookup(addrs)
+    out["numpy_s"] = time.perf_counter() - t0
+    if _eng.jax_modules():
+        with _eng.use("jax"):
+            sim2 = BatchedCacheSim(cfg)
+            h0 = sim2.lookup(addrs[: 1 << 16])  # pay the jit compile
+            sim3 = BatchedCacheSim(cfg)
+            t0 = time.perf_counter()
+            h_jx = sim3.lookup(addrs)
+            out["jax_s"] = time.perf_counter() - t0
+        assert np.array_equal(np.asarray(h_jx), h_np)
+        assert np.array_equal(np.asarray(h0), h_np[: 1 << 16])
+        out["jax_speedup"] = out["numpy_s"] / max(1e-9, out["jax_s"])
+    return out
+
+
+def measure_engine(n: int = N_FULL) -> dict:
+    out: dict = {"n_iters": n, "auto_engine": _eng.current(),
+                 "jax_available": bool(_eng.jax_modules())}
+    stages = _pipeline(n)
+    mems = standard_memory_models()
+    cycles: dict[str, int] = {}
+    backends = ["numpy"] + (["jax"] if _eng.jax_modules() else [])
+    # capture the solver's real running-max inputs during the numpy
+    # run so the kernel A/B below runs on the workload's actual shape
+    captured: list[np.ndarray] = []
+    orig_rmax = _eng._running_max_np
+
+    def capture(a):
+        if len(captured) < 8 and a.shape[0] >= 2 * _eng._RMAX_BLOCK:
+            captured.append(a.copy())
+        return orig_rmax(a)
+
+    for eng in backends:
+        _eng.reset_walls()
+        _eng._running_max_np = capture if eng == "numpy" else orig_rmax
+        try:
+            t0 = time.perf_counter()
+            r = simulate_dataflow_many(
+                stages, {"ACP+64KB": mems["ACP+64KB"]()}, n,
+                fifo_depths=(64,), collect_stalls=False,
+                use_rescache=False, engine=eng)
+            wall = time.perf_counter() - t0
+        finally:
+            _eng._running_max_np = orig_rmax
+        key = next(iter(r))
+        cycles[eng] = r[key].cycles
+        out[eng] = {"wall_s": wall, "phases": _eng.walls(),
+                    "cycles": r[key].cycles}
+        _eng.reset_walls()
+    out["identical"] = len(set(cycles.values())) == 1
+    out["running_max"] = _bench_running_max(captured)
+    out["nway_replay"] = _bench_nway_replay(n)
+    return out
+
+
+def main(n: int = N_FULL, out_path: str = BENCH_PATH) -> dict:
+    res = measure_engine(n)
+    assert res["identical"], (
+        "engine backends disagree on cycle counts: "
+        + ", ".join(f"{k}={v['cycles']}" for k, v in res.items()
+                    if isinstance(v, dict) and "cycles" in v))
+    update_bench("engine", res, out_path)
+    import json
+    print(json.dumps(res, indent=1, default=float))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,12 @@ in-flight dedup, bit-identical results (see ``docs/serving.md``).
             daemon SIGKILL + journal restart); asserts every scenario
             ends bit-identical to a clean library run with exactly one
             committed record per chunk (``benchmarks.chaos_smoke``)
+  engine  — resolution-engine A/B smoke: the same full-scale
+            resolution once per backend (numpy / jax), asserts
+            bit-identical cycle counts, times the ported kernels head
+            to head, and writes an ``engine`` section to
+            ``BENCH_sim.json`` (``benchmarks.engine_smoke``; backend
+            contract in ``docs/engine.md``)
   lint    — IR lint: compile every shipped kernel (paper kernels +
             example kernels) with the static dataflow verifier and
             report every diagnostic; exits nonzero on error-severity
@@ -95,6 +101,14 @@ def main() -> None:
         print("=" * 72)
         from . import chaos_smoke
         chaos_smoke.main()
+
+    if "engine" in sections:
+        print("\n" + "=" * 72)
+        print("Resolution-engine A/B smoke — numpy vs jax, bit-identity "
+              "+ kernel walls")
+        print("=" * 72)
+        from . import engine_smoke
+        engine_smoke.main()
 
     if "gc" in sections:
         import argparse

@@ -155,27 +155,39 @@ def measure_worker_scaling(n: int | None = None) -> dict:
     asserted.  Recorded in ``BENCH_sim.json`` (``worker_scaling``) and
     trend-gated: the workers=1 wall must never regress, and the two
     modes must agree bit-for-bit — the speedup column documents what
-    sharding buys on this machine (≥4-core boxes; a 2-core container
-    pays the double replay with no spare cores)."""
+    the fused effect+replay executor buys on this machine.  Each arm
+    records its per-phase walls (effect / replay / fold / solve, see
+    ``repro.core.engine.walls``) and the resolution-engine backend, so
+    a trend regression is attributable to a phase instead of one
+    opaque wall number."""
+    from repro.core import engine as _eng
     from repro.core import rescache as _rc
     from repro.core.simulator import simulate_dataflow_many
     if n is None:
-        n = 4 * _rc.CHUNK_ITERS  # enough chunks for the pool to engage
+        # enough chunks for the pool to engage, and enough work that
+        # the two spawn-context worker startups (~seconds) don't
+        # dominate what the probe is actually measuring
+        n = 8 * _rc.CHUNK_ITERS
     stages = _perf_pipeline(n)
     cpus = multiprocessing.cpu_count()
-    out = {"n_iters": n, "cpus": cpus}
+    out = {"n_iters": n, "cpus": cpus, "engine": _eng.current()}
     mems = standard_memory_models()
+    _eng.reset_walls()
     t0 = time.perf_counter()
     r1 = simulate_dataflow_many(
         stages, {"ACP+64KB": mems["ACP+64KB"]()}, n, fifo_depths=(64,),
         collect_stalls=False, use_rescache=False)
     out["workers1_s"] = time.perf_counter() - t0
+    out["phases_workers1"] = _eng.walls()
     w = max(2, cpus)
+    _eng.reset_walls()
     t0 = time.perf_counter()
     rw = simulate_dataflow_many(
         stages, {"ACP+64KB": mems["ACP+64KB"]()}, n, fifo_depths=(64,),
         collect_stalls=False, use_rescache=False, workers=w)
     out["workers_all_s"] = time.perf_counter() - t0
+    out["phases_workers_all"] = _eng.walls()
+    _eng.reset_walls()
     out["workers_all"] = w
     out["identical"] = all(rw[key].cycles == r1[key].cycles
                            for key in r1)

@@ -7,18 +7,28 @@ serially through the chunks, so one core does all the work while the
 rest idle behind its memory bandwidth.  This module breaks that chain
 into a **chunk graph** whose expensive nodes are independent:
 
-* **Phase A (parallel)** — every chunk's *own* cache effect: the
-  per-set "last N distinct lines" recency stacks produced by replaying
-  the chunk from an empty cache
-  (:meth:`~repro.core.simulator._SharedResolver.chunk_effects`).  The
-  recency-stack monoid is associative, so chunk effects need no
-  incoming state.
+* **Phase A+B (parallel, fused)** — each chunk replays **once** from
+  an empty cache
+  (:meth:`~repro.core.simulator._SharedResolver.chunk_effects_fused`),
+  producing both its *own* cache effect — the per-set "last N distinct
+  lines" recency stacks, an associative monoid needing no incoming
+  state — and its hit flags up to a small boundary-ambiguity table
+  (the chunk's first ``ways`` first-touches per set, the only verdicts
+  an incoming state can change).  Earlier revisions ran phases A and B
+  as two full replays, which made 2-way sharding an honest slowdown
+  (0.19× recorded in BENCH_sim.json); the fused pass does the work
+  exactly once.  Effects are additionally persisted as rescache
+  *effect records* (``<key>.eNNNNN.npz``) so a re-shard composes
+  stored effects instead of waiting for phase-A messages at all.
 * **Compose (master, cheap)** — a serial scan over the tiny per-chunk
-  effect snapshots (:func:`~repro.core.simulator.compose_stacks`)
+  effect snapshots (:func:`~repro.core.simulator.compose_stacks`) —
+  stored effect records when present, phase-A messages otherwise —
   yields every chunk's exact *incoming* cache state.
-* **Phase B (parallel)** — each chunk replays against its incoming
-  state, producing the exact hit flags and per-geometry hit/miss
-  deltas.
+* **Finalize (parallel, tiny)** — each worker patches its chunk's
+  ambiguous verdicts against the incoming state
+  (:meth:`~repro.core.simulator._SharedResolver.finalize_replay`)
+  and installs the composed outgoing stacks — bit-identical to a full
+  warm replay, at the cost of a few hundred boundary lookups.
 * **Phase C (parallel)** — backing-store draws.  The draw stream is
   position-exact (one PCG64 double per draw), so the master turns the
   per-chunk miss counts into per-chunk draw *offsets* and each worker
@@ -75,13 +85,14 @@ def default_workers(*, cpus: int | None = None, jobs: int = 1,
                     explicit: int | None = None,
                     full: bool = True) -> int:
     """The ``--workers`` default heuristic, shared by every benchmark
-    driver: intra-task sharding pays a second cache replay per chunk,
-    which is an honest *slowdown* on <4-core machines (0.19× measured
-    on the 2-core CI container — see ``worker_scaling`` in
-    BENCH_sim.json), so auto-sharding falls back to the streaming
-    engine unless the machine has ≥ 4 cores or the user passed an
-    explicit count.  ``jobs`` is the concurrent task-pool width the
-    workers share the cores with."""
+    driver: the fused effect+replay pass made sharding break even on
+    2 cores (``worker_scaling`` in BENCH_sim.json; it recorded 0.19×
+    when phases A and B were two separate replays), but process spawn
+    and payload pickling still cost seconds that only amortize when
+    several cores actually run concurrently — so auto-sharding keeps
+    falling back to the streaming engine below 4 cores unless the user
+    passed an explicit count.  ``jobs`` is the concurrent task-pool
+    width the workers share the cores with."""
     if explicit is not None:
         return max(1, explicit)
     if cpus is None:
@@ -114,11 +125,14 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
     try:
         import cloudpickle
         p = cloudpickle.loads(payload_bytes)
+        from . import engine as _eng
         from . import rescache as _rc
         from ..serve import faults as _faults
         from .simulator import _SharedResolver, _lat_itemsize
         _rc.configure(**p["rescache_cfg"])
         _rc.CHUNK_ITERS = p["C"]
+        if p.get("engine"):  # master's backend, not the worker's env
+            _eng.select(p["engine"])
         resolver = _SharedResolver(p["stages"], p["mems"], p["seed"],
                                    capture=p["capture"])
         writers = {mn: _rc.ChunkWriter(
@@ -160,22 +174,23 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
             current = k
             if _faults.active():  # chaos: die mid-chunk
                 _faults.maybe_kill("worker_kill", chunk=k)
-            # A: own effects from an empty cache (state-free)
-            effects, n_addrs = resolver.chunk_effects(lo, hi)
+            # A+B fused: one empty-cache replay yields the chunk's own
+            # effect AND its hit flags up to the boundary-ambiguity
+            # table finalize_replay patches below — the second full
+            # replay the unfused executor paid is gone
+            effects, n_addrs = resolver.chunk_effects_fused(lo, hi)
+            with _eng.phase("effect"):
+                for mn, ekey in p.get("effect_keys", {}).items():
+                    geo = resolver.cache_keys[mn]
+                    if geo is not None and geo in effects:
+                        _rc.put_effect(ekey, k, effects[geo], n_addrs)
             result_q.put(("effect", k, effects, n_addrs))
-            # B: replay against the composed incoming state
+            # B: patch the fused verdicts against the composed
+            # incoming state and install the outgoing stacks
             m = next_msg("state", k)
             if m is None:
                 return
-            for geo, sim in resolver.caches.items():
-                st = m[2].get(geo)
-                if st is None:
-                    sim.tags[:] = -1
-                    sim.lru[:] = 0
-                    sim.ticks[:] = 0
-                else:
-                    sim.import_stacks(st[0], st[1])
-            deltas = resolver.replay(lo, hi)
+            deltas = resolver.finalize_replay(m[2])
             result_q.put(("replay", k, deltas))
             # C: position the draw streams, materialize latencies
             m = next_msg("draws", k)
@@ -210,7 +225,9 @@ def _worker_main(payload_bytes: bytes, task_q, result_q) -> None:
                         resolver.last_ops[mn])
             cums = {mn: resolver.export_resume(mn)[1]
                     for mn in p["mems"]}
-            result_q.put(("done", k, cums, ops_payload))
+            walls = _eng.walls()
+            _eng.reset_walls()
+            result_q.put(("done", k, cums, ops_payload, walls))
     except Exception:  # noqa: BLE001 - forwarded to the master verbatim
         result_q.put(("error", current, traceback.format_exc()))
 
@@ -233,6 +250,7 @@ def simulate_dataflow_sharded(
     ``simulate_dataflow_many(..., workers=N)``.  Falls back to the
     streaming engine whenever sharding cannot help (no live resolution,
     too few chunks) or the stage list will not serialize."""
+    from . import engine as _eng
     from . import rescache as _rc
     from .simulator import (SimResult, _LaneSolver, _OpFolder,
                             _ResolutionPlan, _ServeLost,
@@ -269,6 +287,16 @@ def simulate_dataflow_sharded(
     first_live = plan.resume // C
     if not plan.live or n_chunks - first_live < 2 or workers < 2:
         return _stream(use_rescache)
+    # every live cached model with a v3 key also persists its chunks'
+    # cache-effect monoids as effect records (tiny, content-determined)
+    # — the next shard of this artifact composes them from the store
+    # and never waits on the phase-A message chain
+    effect_keys = {}
+    if _rc.enabled(use_rescache):
+        effect_keys = {
+            mn: plan.keys[mn] for mn in plan.live
+            if plan.keys.get(mn) is not None
+            and plan.resolver.cache_keys[mn] is not None}
     try:
         import cloudpickle
         payload = cloudpickle.dumps({
@@ -279,6 +307,8 @@ def simulate_dataflow_sharded(
             "C": C,
             "capture": bool(plan.writers),
             "keys": {mn: plan.keys[mn] for mn in plan.writers},
+            "engine": _eng.current(),
+            "effect_keys": effect_keys,
             "rescache_cfg": {
                 "enabled": _rc._cfg.enabled,
                 "directory": _rc._dir(),
@@ -352,6 +382,27 @@ def simulate_dataflow_sharded(
                      if plan.resume > 0 else None)}
     effects: dict[int, dict] = {}
     n_addrs: dict[int, int] = {}
+    # stored effect records seed the state chain ahead of the workers:
+    # walk forward from the resume point while every geometry's effect
+    # is on disk, so pump_sends never waits on a phase-A message for a
+    # chunk this store has seen before (snapshots are ~KB each and the
+    # send-side prune below keeps the live set O(workers))
+    if effect_keys and resolver.caches:
+        need: dict[tuple, str] = {}
+        for mn, ekey in effect_keys.items():
+            need.setdefault(resolver.cache_keys[mn], ekey)
+        if set(need) == set(resolver.caches):
+            k = first_live
+            while k < n_chunks:
+                recs = {geo: _rc.get_effect(ekey, k)
+                        for geo, ekey in need.items()}
+                if any(r is None for r in recs.values()):
+                    break
+                state_at[k + 1] = _compose_state(
+                    state_at[k],
+                    {geo: (r[0], r[1]) for geo, r in recs.items()})
+                n_addrs[k] = next(iter(recs.values()))[2]
+                k += 1
     deltas: dict[int, dict] = {}
     done: dict[int, dict] = {}
     cum_draws = dict(resolver.draws)
@@ -548,6 +599,8 @@ def simulate_dataflow_sharded(
                         spec_policy.observe(time.monotonic() - t0)
                 spec_owner.pop(msg[1], None)
                 if msg[1] >= solved:
+                    if msg[1] not in done:  # not a speculative dup
+                        _eng.merge_walls(msg[4])
                     done[msg[1]] = (msg[2], msg[3])
                     sent_state.pop(msg[1], None)
                     sent_draws.pop(msg[1], None)

@@ -127,6 +127,14 @@ _KEY_VERSION = "rescache-v3"
 #: an orphan from an earlier key version (see :func:`gc`).
 _CHUNK_RE = re.compile(r"^[0-9a-f]{32}\.c\d{5,}\.npz$")
 
+#: v3 effect-record file names — one chunk's cache-effect monoid (the
+#: per-set recency stacks from an empty-cache replay, see
+#: ``BatchedCacheSim.export_stacks``) keyed alongside the artifact's
+#: chunk records.  A sharded master composes stored effects instead of
+#: waiting for phase-A messages, so a re-shard (or daemon respawn)
+#: skips the effect chain entirely (see ``docs/engine.md``).
+_EFFECT_RE = re.compile(r"^[0-9a-f]{32}\.e\d{5,}\.npz$")
+
 
 @dataclasses.dataclass
 class _Config:
@@ -167,7 +175,11 @@ _stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0, "stores": 0,
           #: speculative duplicate dispatches of straggling chunks
           #: (first commit wins; the loser is discarded by the
           #: executors' duplicate guards)
-          "speculated": 0}
+          "speculated": 0,
+          #: cache-effect monoid records written / served (the sharded
+          #: master composes served effects instead of waiting for
+          #: phase-A worker messages — see ``put_effect``)
+          "effect_stores": 0, "effect_hits": 0}
 
 
 def configure(*, enabled: bool | None = None, directory: str | None = None,
@@ -271,11 +283,12 @@ def evict(key: str) -> None:
         del _mem[k]
     d = _dir()
     if d:
-        for path in _glob.glob(os.path.join(d, key + ".c*.npz")):
-            try:
-                os.unlink(path)
-            except OSError:
-                pass
+        for pat in (key + ".c*.npz", key + ".e*.npz"):
+            for path in _glob.glob(os.path.join(d, pat)):
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
 
 
 def _dir() -> str | None:
@@ -695,6 +708,100 @@ def prefix(key: str | None,
     return full, avail
 
 
+# ---------------------------------------------------------------------------
+# Cache-effect records (v3 ``<key>.eNNNNN.npz``)
+# ---------------------------------------------------------------------------
+
+def _effect_path(d: str, key: str, idx: int) -> str:
+    return os.path.join(d, f"{key}.e{idx:05d}.npz")
+
+
+def _effect_digest(stacks: np.ndarray, max_tag: int,
+                   n_addrs: int) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(stacks.dtype).encode())
+    h.update(repr(stacks.shape).encode())
+    h.update(np.ascontiguousarray(stacks).tobytes())
+    h.update(str(int(max_tag)).encode())
+    h.update(str(int(n_addrs)).encode())
+    return h.hexdigest()
+
+
+def put_effect(key: str | None, idx: int,
+               effect: tuple[np.ndarray, int], n_addrs: int) -> None:
+    """Commit one chunk's cache-effect monoid — the ``(stacks,
+    max_tag)`` snapshot of an empty-cache replay — plus the chunk's
+    participating-access count.  The record is a pure function of
+    (artifact key, chunk index), so an existing file is already correct
+    and the write is skipped; damage is caught by the checksum on read.
+    Effect records share the chunk store's byte cap and mtime-LRU
+    eviction (they are tiny next to the per-op matrices)."""
+    d = _dir()
+    if key is None or not d or not _cfg.enabled:
+        return
+    final = _effect_path(d, key, idx)
+    if os.path.exists(final):
+        return
+    stacks, max_tag = effect
+    stacks = np.ascontiguousarray(stacks)
+    if stacks.size and int(np.abs(stacks).max()) < (1 << 31):
+        stacks = stacks.astype(np.int32)  # tags fit: halve the record
+    try:
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, stacks=stacks,
+                         max_tag=np.int64(max_tag),
+                         n_addrs=np.int64(n_addrs),
+                         checksum=np.array(_effect_digest(
+                             stacks, max_tag, n_addrs)))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        _stats["effect_stores"] += 1
+    except OSError:
+        _stats["disk_errors"] += 1
+
+
+def get_effect(key: str | None,
+               idx: int) -> tuple[np.ndarray, int, int] | None:
+    """Load one stored cache-effect record: ``(stacks, max_tag,
+    n_addrs)`` with the stacks widened back to int64, or ``None`` when
+    absent.  Damaged records are quarantined and reported as absent —
+    the master then falls back to the worker's phase-A message, so a
+    bad effect record can never change results."""
+    d = _dir()
+    if key is None or not d:
+        return None
+    path = _effect_path(d, key, idx)
+    if not os.path.exists(path):
+        return None
+    try:
+        with np.load(path) as z:
+            stacks = z["stacks"]
+            max_tag = int(z["max_tag"])
+            n_addrs = int(z["n_addrs"])
+            want = str(z["checksum"]) if "checksum" in z.files else None
+        if want is not None and want != _effect_digest(
+                stacks, max_tag, n_addrs):
+            _stats["disk_errors"] += 1
+            _quarantine(path)
+            return None
+        os.utime(path)  # LRU recency for the disk evictor
+        _stats["effect_hits"] += 1
+        return stacks.astype(np.int64), max_tag, n_addrs
+    except (KeyError, ValueError, _BadZipFile):
+        _stats["disk_errors"] += 1
+        _quarantine(path)
+    except OSError:
+        _stats["disk_errors"] += 1
+    return None
+
+
 class ChunkWriter:
     """Commits canonical-grid chunk records as a live run streams.
 
@@ -771,7 +878,8 @@ def gc(max_bytes: int | None = None) -> dict[str, int]:
 
     Removes **orphans** — files that are not v3 chunk records (v1
     whole-run and v2 per-op ``<key>.npz`` artifacts, v2 ``.json``
-    summaries, stray ``.tmp`` files) — then enforces the byte cap
+    summaries, stray ``.tmp`` files) and effect records whose artifact
+    has no chunk records left — then enforces the byte cap
     (``max_bytes`` argument, else ``$REPRO_RESCACHE_MAX_BYTES``, else
     ``disk_mb``) by evicting the least-recently-used chunk files.
     Returns a small report; safe to call concurrently with readers
@@ -783,12 +891,18 @@ def gc(max_bytes: int | None = None) -> dict[str, int]:
         return report
     cap = max_bytes if max_bytes is not None else _disk_cap_bytes()
     keep: list[str] = []
+    effect_files: list[tuple[str, str]] = []  # (key, path)
+    chunk_keys: set[str] = set()
     for f in os.listdir(d):
         path = os.path.join(d, f)
         if not os.path.isfile(path):
             continue
         if _CHUNK_RE.match(f):
             keep.append(path)
+            chunk_keys.add(f.split(".")[0])
+            continue
+        if _EFFECT_RE.match(f):
+            effect_files.append((f.split(".")[0], path))
             continue
         if f.endswith((".npz", ".json", ".tmp", ".quarantine")):
             try:
@@ -798,6 +912,20 @@ def gc(max_bytes: int | None = None) -> dict[str, int]:
                 report["orphan_bytes"] += sz
             except OSError:
                 pass
+    # effect records ride with their artifact's chunk records: once the
+    # last chunk of a key is gone (evicted, cleared), its effects are
+    # orphans
+    for key, path in effect_files:
+        if key in chunk_keys:
+            keep.append(path)
+            continue
+        try:
+            sz = os.path.getsize(path)
+            os.unlink(path)
+            report["orphans_removed"] += 1
+            report["orphan_bytes"] += sz
+        except OSError:
+            pass
     stat = {}
     for path in keep:
         try:
@@ -829,6 +957,8 @@ def census() -> dict[str, Any]:
     chunks = 0
     quarantine_files = 0
     total = 0
+    effect_count = 0
+    effect_bytes = 0
     if d and os.path.isdir(d):
         for f in os.listdir(d):
             if _CHUNK_RE.match(f):
@@ -836,6 +966,13 @@ def census() -> dict[str, Any]:
                 chunks += 1
                 try:
                     total += os.path.getsize(os.path.join(d, f))
+                except OSError:
+                    pass
+            elif _EFFECT_RE.match(f):
+                effect_count += 1
+                try:
+                    effect_bytes += os.path.getsize(
+                        os.path.join(d, f))
                 except OSError:
                     pass
             elif f.endswith(".quarantine"):
@@ -846,7 +983,11 @@ def census() -> dict[str, Any]:
     except ImportError:  # pragma: no cover
         injected = {}
     return {"dir": d, "artifacts": len(keys), "chunks": chunks,
-            "bytes": total, "cold_chunks": _stats["cold_chunks"],
+            "bytes": total,
+            "effects": {"count": effect_count, "bytes": effect_bytes,
+                        "stores": _stats["effect_stores"],
+                        "hits": _stats["effect_hits"]},
+            "cold_chunks": _stats["cold_chunks"],
             "served_chunks": _stats["served_chunks"],
             "worker_retries": _stats["worker_retries"],
             "quarantined": _stats["quarantined"],

@@ -302,6 +302,7 @@ def simulate_schedule(
     seed: int = 0,
     use_rescache: bool | None = None,
     server: str | None = None,
+    engine: str | None = None,
 ) -> SimReport:
     mem = mem or acp()
     cfg = getattr(schedule, "transforms", None)
@@ -324,9 +325,11 @@ def simulate_schedule(
         except ServeUnavailable:
             pass
     df = simulate_dataflow(stages, mem, n_df, fifo_depth=fifo_depth,
-                           seed=seed, use_rescache=use_rescache)
+                           seed=seed, use_rescache=use_rescache,
+                           engine=engine)
     cv = simulate_conventional([fused_stage(base_stages)], mem, n_iters,
-                               seed=seed, use_rescache=use_rescache)
+                               seed=seed, use_rescache=use_rescache,
+                               engine=engine)
     return SimReport(schedule, stages, df, cv, mem, n_iters, microbatches)
 
 
@@ -434,6 +437,7 @@ def sweep_schedule(
     workers: int | None = None,
     depth_incremental: bool = True,
     server: str | None = None,
+    engine: str | None = None,
 ) -> SweepResult:
     """Grid-run the cycle simulator over memory models (§V: ACP / HP,
     ±64 KB cache) × FIFO depths × ``mem_in_scc`` modes × port bandwidths
@@ -497,7 +501,8 @@ def sweep_schedule(
     conv_mems = {mn: variant(mk, None, mos[0]) for mn, mk in mems.items()}
     conv = simulate_conventional_many(
         [fused_stage(conv_stages)], conv_mems, n_iters,
-        freq_mhz=freq_mhz, seed=seed, use_rescache=use_rescache)
+        freq_mhz=freq_mhz, seed=seed, use_rescache=use_rescache,
+        engine=engine)
 
     # the engine the dataflow grid actually runs on, recorded per row
     # (satellite of the serving tier: on <4-core machines the workers
@@ -540,7 +545,8 @@ def sweep_schedule(
             stages, vmems, n_df, fifo_depths=fifo_depths,
             freq_mhz=freq_mhz, seed=seed, collect_stalls=collect_stalls,
             use_rescache=use_rescache, workers=workers,
-            depth_incremental=depth_incremental, server=server)
+            depth_incremental=depth_incremental, server=server,
+            engine=engine)
         resil1 = _resil_snap()
         resilience = {k: resil1[k] - resil0[k] for k in _RESIL}
         for vn, (mn, wpc, mo) in variants.items():

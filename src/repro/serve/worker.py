@@ -13,12 +13,17 @@ Phase messages (daemon → worker):
 * ``("job", jid, payload)`` — install a job context: the cloudpickled
   stage list + live memory models + seed, a shared resolver, and the
   v3 chunk writers.
-* ``("task", jid, k, lo, hi)`` — phase A: the chunk's own cache effect
-  from an empty cache (state-free, freely parallel).
-* ``("state", jid, k, lo, hi, st)`` — phase B: replay against the
-  composed incoming state; the replay scratch (hit flags, flattened
-  participation, *end-of-chunk* cache stacks) is saved per ``(jid, k)``
-  so later phases survive interleaving with other chunks' replays.
+* ``("task", jid, k, lo, hi)`` — phases A+B fused: **one** empty-cache
+  replay yields the chunk's own cache effect (state-free, freely
+  parallel) plus its hit flags up to a small boundary-ambiguity table;
+  the fused scratch is saved per ``(jid, k)`` so later phases survive
+  interleaving with other chunks.  The effect is also persisted as a
+  rescache effect record (``<key>.eNNNNN.npz``) when the job has a v3
+  key.
+* ``("state", jid, k, lo, hi, st)`` — finalize: patch the ambiguous
+  verdicts against the composed incoming state (no second replay) and
+  snapshot what phase C consumes (hit flags, flattened participation,
+  *end-of-chunk* cache stacks).
 * ``("draws", jid, k, msg)`` — phase C: position each model's PCG64
   stream at its absolute draw offset, materialize latencies, commit the
   v3 chunk record (or return the matrix inline past the artifact cap).
@@ -77,6 +82,10 @@ def worker_main(wid: int, C: int, task_q, result_q,
                     "writers": {mn: w for mn, w in writers.items()
                                 if not w.dead},
                     "mems": p["mems"],
+                    "effect_keys": {
+                        mn: key for mn, key in p["keys"].items()
+                        if key is not None
+                        and resolver.cache_keys[mn] is not None},
                 }
             elif op == "forget":
                 _, jid = m
@@ -88,36 +97,42 @@ def worker_main(wid: int, C: int, task_q, result_q,
                 if faults.active():  # chaos: die / straggle mid-chunk
                     faults.maybe_kill("worker_kill", worker=wid,
                                       chunk=k)
-                r = jobs[jid]["resolver"]
-                effects, n_addrs = r.chunk_effects(lo, hi)
+                j = jobs[jid]
+                r = j["resolver"]
+                effects, n_addrs = r.chunk_effects_fused(lo, hi)
+                for mn, ekey in j["effect_keys"].items():
+                    geo = r.cache_keys[mn]
+                    if geo is not None and geo in effects:
+                        _rc.put_effect(ekey, k, effects[geo], n_addrs)
+                # the fused replay scratch, snapshotted before another
+                # chunk's task overwrites the resolver
+                scratch[(jid, k)] = {
+                    "lo": lo, "hi": hi,
+                    "fused": r._fused,
+                    "store_flat": r._store_flat,
+                    "n_addrs": r._n_addrs,
+                    "flat_p": r._flat_p,
+                    "burst_words": r._burst_words,
+                }
                 result_q.put(("effect", wid, jid, k, effects, n_addrs,
                               time.perf_counter() - t0))
             elif op == "state":
                 _, jid, k, lo, hi, st = m
                 r = jobs[jid]["resolver"]
-                for geo, sim in r.caches.items():
-                    s = st.get(geo)
-                    if s is None:
-                        sim.tags[:] = -1
-                        sim.lru[:] = 0
-                        sim.ticks[:] = 0
-                    else:
-                        sim.import_stacks(s[0], s[1])
-                deltas = r.replay(lo, hi)
-                # everything phase C consumes, snapshotted before any
-                # other chunk's replay overwrites the resolver: the
-                # flattened-access scratch *and* the end-of-chunk cache
-                # stacks (the record's resume state)
-                scratch[(jid, k)] = {
-                    "lo": lo, "hi": hi,
-                    "store_flat": r._store_flat,
-                    "hits_by_key": r._hits_by_key,
-                    "n_addrs": r._n_addrs,
-                    "flat_p": r._flat_p,
-                    "burst_words": r._burst_words,
-                    "end": {geo: sim.export_stacks()
-                            for geo, sim in r.caches.items()},
-                }
+                sc = scratch[(jid, k)]
+                r._fused = sc["fused"]
+                r._store_flat = sc["store_flat"]
+                r._n_addrs = sc["n_addrs"]
+                r._flat_p = sc["flat_p"]
+                r._burst_words = sc["burst_words"]
+                deltas = r.finalize_replay(st)
+                # everything phase C consumes, completed with the
+                # finalize outputs: the hit flags *and* the
+                # end-of-chunk cache stacks (the record's resume state)
+                sc["hits_by_key"] = r._hits_by_key
+                sc["end"] = {geo: sim.export_stacks()
+                             for geo, sim in r.caches.items()}
+                sc.pop("fused", None)
                 result_q.put(("replay", wid, jid, k, deltas,
                               time.perf_counter() - t0))
             elif op == "draws":

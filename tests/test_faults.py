@@ -160,7 +160,10 @@ def test_corrupt_and_truncate_are_deterministic(tmp_path):
 # ---------------------------------------------------------------------------
 
 def _store_files(d):
-    return sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    # chunk records only: per-chunk cache-effect records
+    # (``<key>.eNNNNN.npz``) commit alongside them and would skew the
+    # committed-prefix counts these drills assert on
+    return sorted(f for f in os.listdir(d) if rc._CHUNK_RE.match(f))
 
 
 def _one_record(store):
